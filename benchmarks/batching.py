@@ -1,0 +1,48 @@
+"""Paper Fig. 9 / Finding 1: static vs continuous batching normalized
+latency as request rate grows, at several batch-size caps."""
+from __future__ import annotations
+
+from repro.core.metrics import percentile
+from repro.core.simulator import SimSpec, WorkerSpec, simulate
+from repro.core.workload import WorkloadSpec
+
+from benchmarks.common import Bench, fmt
+
+RATES = (2.0, 4.0, 8.0, 12.0, 16.0, 20.0)
+BATCHES = (8, 16, 32, 0)           # 0 => "inf" (no limit)
+N_REQ = 2000                        # paper uses 50k; scaled for CPU time
+
+
+def run(n_req: int = N_REQ):
+    b = Bench("batching_fig9")
+    finding1 = []
+    for policy in ("static", "continuous"):
+        for cap in BATCHES:
+            for qps in RATES:
+                spec = SimSpec(
+                    arch="llama2-7b", workers=[WorkerSpec(hw="A100")],
+                    workload=WorkloadSpec(num_requests=n_req, qps=qps,
+                                          seed=0),
+                    local_policy=policy,
+                    max_batch=cap if cap else 4096,
+                    max_batched_tokens=4096)
+                res = simulate(spec)
+                norm = res.normalized_latencies()
+                row = dict(policy=policy,
+                           batch="inf" if cap == 0 else cap, qps=qps,
+                           norm_lat_mean=fmt(sum(norm) / len(norm)),
+                           norm_lat_p99=fmt(percentile(norm, 99)),
+                           p99=fmt(res.latency_stats()["p99"]),
+                           throughput=fmt(res.throughput()))
+                b.add(**row)
+                if cap == 16:
+                    finding1.append((policy, qps, row["norm_lat_mean"]))
+    # Finding 1 check: at the highest rate continuous << static
+    s = [x for p, q, x in finding1 if p == "static" and q == RATES[-1]][0]
+    c = [x for p, q, x in finding1 if p == "continuous" and q == RATES[-1]][0]
+    b.finish(derived=f"finding1_static/continuous_norm_lat={s / c:.1f}x")
+    return s / c
+
+
+if __name__ == "__main__":
+    run()

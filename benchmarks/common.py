@@ -1,0 +1,50 @@
+"""Shared benchmark utilities: CSV rows + timing."""
+from __future__ import annotations
+
+import csv
+import io
+import json
+import os
+import time
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "bench")
+
+
+def ensure_dir() -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return RESULTS_DIR
+
+
+class Bench:
+    """Collects rows; prints a compact CSV block per benchmark."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[Dict] = []
+        self.t0 = time.perf_counter()
+
+    def add(self, **row):
+        self.rows.append(row)
+
+    def finish(self, derived: str = "") -> float:
+        wall = time.perf_counter() - self.t0
+        ensure_dir()
+        path = os.path.join(RESULTS_DIR, f"{self.name}.csv")
+        if self.rows:
+            keys = list(self.rows[0].keys())
+            with open(path, "w", newline="") as f:
+                w = csv.DictWriter(f, fieldnames=keys)
+                w.writeheader()
+                for r in self.rows:
+                    w.writerow(r)
+        us_per_call = wall / max(1, len(self.rows)) * 1e6
+        print(f"{self.name},{us_per_call:.1f},{derived}")
+        return wall
+
+
+def fmt(x, nd=4):
+    if isinstance(x, float):
+        return round(x, nd)
+    return x

@@ -1,0 +1,65 @@
+"""Injects the generated roofline table and §Perf log into EXPERIMENTS.md
+(replaces the <!-- ROOFLINE_TABLE --> / <!-- PERF_LOG --> markers)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline_report import RESULTS, build_table, to_markdown
+
+REPO = os.path.dirname(RESULTS)
+EXP = os.path.join(REPO, "EXPERIMENTS.md")
+
+
+def perf_log_md() -> str:
+    path = os.path.join(RESULTS, "dryrun_perf", "perf_log.json")
+    if not os.path.exists(path):
+        return "_(perf log not generated)_"
+    log = json.load(open(path))
+    out = []
+    for e in log:
+        d = e["delta_pct"]
+        b, a = e["before"], e["after"]
+        verdict = "CONFIRMED" if _confirms(e) else "REFUTED"
+        out.append(f"**{e['iteration']}** ({e['cell']}) — *{verdict}*\n\n"
+                   f"- Hypothesis: {e['hypothesis']}\n"
+                   f"- Expected: {e['expect']}\n"
+                   f"- Before: compute {b['compute']:.3e}s, memory "
+                   f"{b['memory']:.3e}s, collective {b['collective']:.3e}s "
+                   f"(dominant: {b['dominant']})\n"
+                   f"- After: compute {a['compute']:.3e}s, memory "
+                   f"{a['memory']:.3e}s, collective {a['collective']:.3e}s "
+                   f"(dominant: {a['dominant']})\n"
+                   f"- Delta: " +
+                   ", ".join(f"{k} {v:+.1f}%" for k, v in d.items()) + "\n")
+    return "\n".join(out)
+
+
+def _confirms(e) -> bool:
+    d = e["delta_pct"]
+    exp = e["expect"]
+    if "compute down" in exp:
+        want = d.get("compute", 0.0) < -3
+        if ">2x" in exp:
+            want = d.get("compute", 0.0) < -50
+        return want
+    if "collective down" in exp:
+        return d.get("collective", 0.0) < -3
+    return True
+
+
+def main():
+    table_md = to_markdown(build_table(
+        os.path.join(RESULTS, "dryrun_probe")))
+    text = open(EXP).read()
+    text = text.replace("<!-- ROOFLINE_TABLE -->", table_md)
+    text = text.replace("<!-- PERF_LOG -->", perf_log_md())
+    open(EXP, "w").write(text)
+    with open(os.path.join(RESULTS, "roofline.md"), "w") as f:
+        f.write(table_md + "\n")
+    print("EXPERIMENTS.md updated;", len(table_md.splitlines()) - 4,
+          "roofline cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper Fig. 12 / Finding 4: substituting decode devices (V100, GDDR6-AiM
+PIM, low-FLOPS A100) in a disaggregated 8-slot node; cost-efficiency."""
+from __future__ import annotations
+
+from repro.core.costmodel.hardware import HARDWARE
+from repro.core.simulator import SimSpec, WorkerSpec, simulate
+from repro.core.workload import WorkloadSpec
+
+from benchmarks.common import Bench, fmt
+
+TTFT_SLO, MTPOT_SLO = 15.0, 0.3
+
+
+def max_goodput(workers, n_req, rates):
+    peak = 0.0
+    for qps in rates:
+        spec = SimSpec(
+            arch="llama2-7b", workers=workers, global_policy="disagg",
+            workload=WorkloadSpec(num_requests=n_req, qps=qps, seed=0,
+                                  lengths="fixed", prompt_len=128,
+                                  output_len=256),
+            local_policy="continuous", max_batch=256,
+            max_batched_tokens=8192)
+        res = simulate(spec)
+        peak = max(peak, res.slo_goodput(ttft_slo=TTFT_SLO,
+                                         mtpot_slo=MTPOT_SLO))
+    return peak
+
+
+def run(n_req: int = 500):
+    b = Bench("hardware_sub_fig12")
+    rates = (4.0, 8.0, 16.0)
+    results = {}
+    for n_prefill in (1, 2):
+        n_dec = 8 - n_prefill
+        for dec_hw in ("A100", "V100", "G6-AiM", "A100-low"):
+            workers = [WorkerSpec(hw="A100", role="prefill")
+                       for _ in range(n_prefill)] + \
+                      [WorkerSpec(hw=dec_hw, role="decode")
+                       for _ in range(n_dec)]
+            gp = max_goodput(workers, n_req, rates)
+            cost = n_prefill * 1.0 + n_dec * HARDWARE[dec_hw].price
+            results[(n_prefill, dec_hw)] = (gp, cost)
+            b.add(prefill=n_prefill, decode=n_dec, decode_hw=dec_hw,
+                  goodput=fmt(gp), cost_a100=fmt(cost, 2),
+                  goodput_per_cost=fmt(gp / cost))
+    # Finding 4: PIM decode ~ A100 decode at roughly half the cost
+    a = results[(1, "A100")]
+    g = results[(1, "G6-AiM")]
+    ratio = g[0] / a[0]
+    b.finish(derived=f"finding4_pim_vs_a100_goodput={ratio:.2f}"
+                     f"_cost={g[1] / a[1]:.2f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

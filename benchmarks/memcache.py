@@ -1,0 +1,47 @@
+"""Paper Fig. 14 / Finding 6: multi-round KV memory pool vs recompute,
+P99 latency across input/output lengths and request rates."""
+from __future__ import annotations
+
+from repro.core.mem.memory_pool import PoolConfig
+from repro.core.simulator import SimSpec, WorkerSpec, simulate
+from repro.core.workload import WorkloadSpec
+
+from benchmarks.common import Bench, fmt
+
+LENGTHS = ((32, 32), (64, 64), (128, 64), (128, 128))
+RATES = (4.0, 8.0, 12.0, 16.0)
+
+
+def run(n_req: int = 1200):
+    b = Bench("memcache_fig14")
+    gains = {}
+    for in_len, out_len in LENGTHS:
+        for pool_on in (False, True):
+            for qps in RATES:
+                wl = WorkloadSpec(
+                    num_requests=n_req, qps=qps, seed=0, lengths="fixed",
+                    prompt_len=in_len, output_len=out_len,
+                    multi_round_frac=0.5, rounds_min=2, rounds_max=7)
+                spec = SimSpec(
+                    arch="llama2-7b", workers=[WorkerSpec(hw="A100")],
+                    workload=wl, local_policy="continuous",
+                    max_batch=256, max_batched_tokens=4096,
+                    pool=PoolConfig() if pool_on else None)
+                res = simulate(spec)
+                p99 = res.latency_stats()["p99"]
+                b.add(in_len=in_len, out_len=out_len,
+                      pool=int(pool_on), qps=qps, p99=fmt(p99),
+                      throughput=fmt(res.throughput()),
+                      hit_rate=fmt(res.pool_stats["hit_rate"])
+                      if res.pool_stats else 0.0)
+                gains[(in_len, out_len, pool_on, qps)] = p99
+    # Finding 6: cache helps most around out=64; always >= parity
+    q = RATES[-1]
+    r64 = gains[(64, 64, False, q)] / gains[(64, 64, True, q)]
+    r32 = gains[(32, 32, False, q)] / gains[(32, 32, True, q)]
+    b.finish(derived=f"finding6_p99_speedup_out64={r64:.2f}x_out32={r32:.2f}x")
+    return gains
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,204 @@
+"""§Perf hillclimb driver: hypothesis → change → re-lower → confirm/refute.
+
+Each iteration re-runs the depth-probe dry-run for one cell with changed
+``RunSettings`` (or sharding knobs), extrapolates the roofline terms, and
+compares against the previous iteration — emitting the §Perf log rows
+for EXPERIMENTS.md.
+
+Usage:
+    python -m benchmarks.perf_hillclimb            # run all iterations
+    python -m benchmarks.perf_hillclimb --report   # just print the log
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from benchmarks.roofline_report import (RESULTS, build_table,
+                                        cell_from_record, extrapolate)
+
+PERF_DIR = os.path.join(RESULTS, "dryrun_perf")
+BASE_DIR = os.path.join(RESULTS, "dryrun_probe")
+
+BASELINE = {"attn_impl": "blocked", "moe_impl": "dense_onehot",
+            "remat": "full", "scan_layers": False}
+
+
+@dataclass
+class Iteration:
+    cell: str                  # "arch|shape"
+    name: str
+    hypothesis: str
+    settings: Dict            # full settings dict for the run
+    expect: str               # which term should move, and how
+    ref: Optional[str] = None  # iteration to diff against (None=baseline)
+
+
+# The three hillclimbed cells, picked from the baseline table:
+#   A granite-moe-3b × train_4k    — worst useful-FLOPs ratio (0.15)
+#   B qwen3-14b × prefill_32k      — collective-bound serving cell, most
+#                                    representative of the paper (serving)
+#   C qwen2-0.5b × train_4k        — smallest model, largest relative
+#                                    collective+memory overheads
+ITERATIONS: List[Iteration] = [
+    # ---- cell A: granite-moe-3b-a800m × train_4k -----------------------
+    Iteration(
+        cell="granite-moe-3b-a800m|train_4k", name="A1_moe_sort",
+        hypothesis=(
+            "dense_onehot computes all 48 (padded) experts per token: MoE "
+            "FFN FLOPs are E/k = 48/8 = 6x the active FLOPs. Dropless "
+            "grouped-GEMM (ragged_dot) computes only routed tokens -> "
+            "MoE FFN compute drops ~6x; MoE FFN is the bulk of this "
+            "model's FLOPs, so the compute term should fall >2x."),
+        settings={**BASELINE, "moe_impl": "sort"},
+        expect="compute down >2x"),
+    Iteration(
+        cell="granite-moe-3b-a800m|train_4k", name="A2_remat_dots",
+        hypothesis=(
+            "remat=full recomputes the whole forward during backward: "
+            "total = fwd+refwd+bwd = 8*N*D vs 6*N*D without. Saving "
+            "matmul outputs (dots_saveable) removes the re-forward -> "
+            "compute term down ~25% on top of A1."),
+        settings={**BASELINE, "remat": "dots_saveable"},
+        expect="compute down ~25%"),
+    Iteration(
+        cell="granite-moe-3b-a800m|train_4k", name="A3_causal_attn",
+        hypothesis=(
+            "granite-3b at S=4096: attention rectangle = 4*S*hq*hd per "
+            "token-layer = 2.5e6*32L = 8e7 ... ~33% of this small-expert "
+            "model's train FLOPs. Causal-only blocks halve it -> expect "
+            "~15-17% off compute."),
+        settings={**BASELINE, "attn_impl": "blocked_causal"},
+        expect="compute down"),
+    # ---- cell B: qwen3-14b × prefill_32k (serving) ---------------------
+    Iteration(
+        cell="qwen3-14b|prefill_32k", name="B1_replicate_weights",
+        hypothesis=(
+            "The baseline plan ZeRO-3-shards weights even for serving, so "
+            "every layer all-gathers its weights during prefill. Serving "
+            "should replicate weights over 'data' (fsdp_params=False): "
+            "14B bf16 / 16-way TP = 1.75 GB/device, well under 16 GB -> "
+            "per-layer weight all-gathers vanish; collective term drops "
+            "to the TP activation all-reduces only."),
+        settings={**BASELINE, "fsdp_params": False},
+        expect="collective down"),
+    Iteration(
+        cell="qwen3-14b|prefill_32k", name="B2_embed_fsdp",
+        hypothesis=(
+            "The vocab-parallel embedding gather forces GSPMD into a "
+            "'replicate-then-repartition' reshard of the (B,S,d) "
+            "activations (XLA warns 'involuntary full rematerialization')"
+            " — a constant ~80 GB/device all-gather term in the probe. "
+            "Sharding the (untied) embedding over d_model/'data' instead "
+            "makes the gather local -> the constant all-gather term "
+            "collapses."),
+        settings={**BASELINE, "fsdp_params": False,
+                  "embed_shard": "fsdp"},
+        expect="collective down", ref="B1_replicate_weights"),
+    Iteration(
+        cell="qwen3-14b|prefill_32k", name="B3_causal_attn",
+        hypothesis=(
+            "At S=32k the attention rectangle is 4*S*hq*hd = 6.7e8 FLOPs "
+            "per token-layer x 40 layers = 2.7e10/token — roughly EQUAL "
+            "to the 2*N = 2.8e10/token of the linears. Attention is "
+            "~47% of prefill FLOPs; causal-only blocks halve it -> "
+            "expect ~23% off the compute term."),
+        settings={**BASELINE, "fsdp_params": False,
+                  "embed_shard": "fsdp",
+                  "attn_impl": "blocked_causal"},
+        expect="compute down ~23%", ref="B2_embed_fsdp"),
+    # ---- cell C: qwen2-0.5b × train_4k ---------------------------------
+    Iteration(
+        cell="qwen2-0.5b|train_4k", name="C1_no_fsdp",
+        hypothesis=(
+            "A 0.5B model does not need ZeRO-3: FSDP all-gathers every "
+            "layer's weights each step (fwd+refwd+bwd). Replicating "
+            "non-embedding weights over 'data' removes those all-gathers "
+            "-> collective term down; per-device memory rises by ~12B/16 "
+            "x params (trivial for 0.5B)."),
+        settings={**BASELINE, "fsdp_params": False},
+        expect="collective down"),
+    Iteration(
+        cell="qwen2-0.5b|train_4k", name="C2_remat_causal",
+        hypothesis=(
+            "qwen2 at S=4096 with d_model=896 has a high attention:"
+            "linear FLOPs ratio (~33% of train FLOPs) — causal-only "
+            "attention halves it -> ~17-23% off compute. dots_saveable "
+            "is stacked but expected inert in this counter (see A2: XLA "
+            "CSE already merges the unrolled re-forward)."),
+        settings={**BASELINE, "fsdp_params": False,
+                  "attn_impl": "blocked_causal",
+                  "remat": "dots_saveable"},
+        expect="compute down", ref="C1_no_fsdp"),
+]
+
+
+def run_probe(arch: str, shape: str, settings: Dict, outdir: str) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--mesh", "single",
+           "--depth-probe", "--settings", json.dumps(settings),
+           "--out", outdir]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(RESULTS), "src")
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(f"probe failed: {r.stdout[-2000:]}"
+                           f"{r.stderr[-2000:]}")
+
+
+def load_terms(dirname: str, arch: str, shape: str) -> Optional[Dict]:
+    cells = build_table(dirname, f"{arch}_{shape}_single_*.json")
+    for c in cells:
+        if c.arch == arch and c.shape == shape:
+            return {"compute": c.compute_s, "memory": c.memory_s,
+                    "collective": c.collective_s, "dominant": c.dominant,
+                    "useful": c.useful_ratio}
+    return None
+
+
+def main():
+    report_only = "--report" in sys.argv
+    log = []
+    done: Dict[str, Dict] = {}
+    for it in ITERATIONS:
+        arch, shape = it.cell.split("|")
+        outdir = os.path.join(PERF_DIR, it.name)
+        if not report_only and not (
+                os.path.isdir(outdir) and len(os.listdir(outdir)) >= 2):
+            print(f"[run] {it.name} ({arch} x {shape})", flush=True)
+            run_probe(arch, shape, it.settings, outdir)
+        base = done.get(it.ref) if it.ref else None
+        if base is None:
+            base = load_terms(BASE_DIR, arch, shape)
+        after = load_terms(outdir, arch, shape)
+        if base is None or after is None:
+            print(f"[skip] {it.name}: missing artifacts")
+            continue
+        deltas = {k: (after[k] / base[k] - 1.0) * 100
+                  for k in ("compute", "memory", "collective")
+                  if base[k] > 0}
+        entry = {"iteration": it.name, "cell": it.cell,
+                 "hypothesis": it.hypothesis, "expect": it.expect,
+                 "before": base, "after": after,
+                 "delta_pct": {k: round(v, 1) for k, v in deltas.items()}}
+        entry["vs"] = it.ref or "baseline"
+        log.append(entry)
+        done[it.name] = after
+        print(f"[done] {it.name}: " +
+              " ".join(f"{k}:{v:+.1f}%" for k, v in deltas.items()),
+              flush=True)
+    os.makedirs(PERF_DIR, exist_ok=True)
+    with open(os.path.join(PERF_DIR, "perf_log.json"), "w") as f:
+        json.dump(log, f, indent=1)
+    print(f"perf_hillclimb,{len(log)},iterations->"
+          f"{os.path.join(PERF_DIR, 'perf_log.json')}")
+
+
+if __name__ == "__main__":
+    main()

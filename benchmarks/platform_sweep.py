@@ -1,0 +1,75 @@
+"""Paper Fig. 15 / Finding 7: sweep the prefill device's FLOPS, memory
+capacity and bandwidth in a disaggregated node — prefill wants FLOPS."""
+from __future__ import annotations
+
+from repro.core.simulator import SimSpec, WorkerSpec, simulate
+from repro.core.workload import WorkloadSpec
+
+from benchmarks.common import Bench, fmt
+
+TTFT_SLO, MTPOT_SLO = 15.0, 0.3
+
+
+def max_goodput(prefill_overrides, n_prefill, n_req, rates,
+                mem_cap=None):
+    peak = 0.0
+    workers = [WorkerSpec(hw="A100", role="prefill",
+                          hw_overrides=prefill_overrides,
+                          mem_cap_override=mem_cap)
+               for _ in range(n_prefill)] + \
+              [WorkerSpec(hw="A100", role="decode")
+               for _ in range(8 - n_prefill)]
+    for qps in rates:
+        spec = SimSpec(
+            arch="llama2-7b", workers=workers, global_policy="disagg",
+            workload=WorkloadSpec(num_requests=n_req, qps=qps, seed=0),
+            local_policy="continuous", max_batch=256,
+            max_batched_tokens=8192)
+        res = simulate(spec)
+        peak = max(peak, res.slo_goodput(ttft_slo=TTFT_SLO,
+                                         mtpot_slo=MTPOT_SLO))
+    return peak
+
+
+def run(n_req: int = 800):
+    b = Bench("platform_sweep_fig15")
+    # rates chosen to SATURATE the prefill stage (TTFT SLO binds): one
+    # A100 prefills ~14k tok/s of ~170-token ShareGPT prompts => ~80 QPS
+    rates = (30.0, 60.0, 90.0)
+    base_flops = 312e12
+    base_bw = 2.039e12
+    out = {}
+    for n_prefill in (1, 2):
+        ref = max_goodput({}, n_prefill, n_req, rates)
+        out[(n_prefill, "Ori", 1.0)] = ref
+        b.add(config=f"P{n_prefill}-D{8 - n_prefill}", knob="Ori",
+              scale=1.0, goodput=fmt(ref), vs_ori=1.0)
+        for scale in (0.25, 0.5, 2.0, 4.0):
+            gp = max_goodput({"flops": base_flops * scale}, n_prefill,
+                             n_req, rates)
+            out[(n_prefill, "T", scale)] = gp
+            b.add(config=f"P{n_prefill}-D{8 - n_prefill}", knob="T",
+                  scale=scale, goodput=fmt(gp), vs_ori=fmt(gp / ref, 3))
+        for scale in (0.125, 0.25, 0.5, 2.0, 4.0):
+            gp = max_goodput({"mem_bw": base_bw * scale}, n_prefill,
+                             n_req, rates)
+            out[(n_prefill, "B", scale)] = gp
+            b.add(config=f"P{n_prefill}-D{8 - n_prefill}", knob="B",
+                  scale=scale, goodput=fmt(gp), vs_ori=fmt(gp / ref, 3))
+        for scale in (0.25, 0.5, 2.0, 4.0):
+            gp = max_goodput({}, n_prefill, n_req, rates,
+                             mem_cap=80e9 * scale)
+            out[(n_prefill, "C", scale)] = gp
+            b.add(config=f"P{n_prefill}-D{8 - n_prefill}", knob="C",
+                  scale=scale, goodput=fmt(gp), vs_ori=fmt(gp / ref, 3))
+    # Finding 7: halving FLOPS hurts; halving BW/capacity ~doesn't
+    t_half = out[(1, "T", 0.5)] / out[(1, "Ori", 1.0)]
+    b_half = out[(1, "B", 0.5)] / out[(1, "Ori", 1.0)]
+    c_half = out[(1, "C", 0.5)] / out[(1, "Ori", 1.0)]
+    b.finish(derived=f"finding7_half_T={t_half:.2f}_half_B={b_half:.2f}"
+                     f"_half_C={c_half:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,274 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from the
+compiled dry-run artifacts.
+
+Terms (seconds, per the assignment):
+  compute    = HLO_FLOPs / (chips × 197 TF bf16)
+  memory     = HLO_bytes / (chips × 819 GB/s)
+  collective = collective_bytes / (chips × 50 GB/s ICI)
+
+HLO accounting note (documented in EXPERIMENTS.md §Roofline): XLA's
+``cost_analysis`` counts a while-loop body ONCE, so the dry-run used for
+this table is lowered in **counting mode** (``scan_layers=False`` —
+layer loops unrolled).  The one loop that remains is flash attention's
+internal q/kv block sweep; its trip count is known statically, so its
+FLOPs/bytes are added analytically (``attn_correction``), and the method
+is validated against fully-unrolled compiles at small scale in
+tests/test_roofline_accounting.py.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.configs import get_config, get_shape, shape_applicable
+from repro.configs.base import DECODE, PREFILL, TRAIN
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+# ---------------------------------------------------------------------------
+# Analytic attention-loop correction (the only loop left in counting mode)
+# ---------------------------------------------------------------------------
+def _tri_pairs(nq: int, nk: int, bq: int, bk: int) -> int:
+    return sum(1 for qi in range(nq) for ki in range(nk)
+               if ki * bk <= qi * bq + bq - 1)
+
+
+def attn_correction(arch: str, shape_name: str, settings: Dict,
+                    n_devices: int):
+    """(extra_flops, extra_bytes) per device for the blocked-attention
+    inner loop beyond the single counted block pair."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if cfg.family in ("ssm",):
+        return 0.0, 0.0
+    if shape.kind == DECODE:
+        return 0.0, 0.0            # decode attention has no inner loop
+    s = shape.seq_len
+    bsz = shape.global_batch
+    impl = settings.get("attn_impl", "blocked")
+    bq = min(settings.get("attn_block_q", 1024), s)
+    bk = min(settings.get("attn_block_kv", 1024), s)
+    if s <= settings.get("naive_attn_max_seq", 2048):
+        return 0.0, 0.0            # naive path: fully counted
+    nq, nk = s // bq, s // bk
+    if impl == "blocked_causal":
+        pairs = _tri_pairs(nq, nk, bq, bk)
+    else:
+        pairs = nq * nk
+    # per-pair global flops: QK^T + PV with all q heads
+    hq, hd = cfg.n_heads, cfg.head_dim
+    layers = {"dense": cfg.num_layers, "moe": cfg.num_layers,
+              "vlm": cfg.num_layers,
+              "hybrid": (cfg.num_layers // cfg.attn_period
+                         if cfg.attn_period else 0),
+              "audio": cfg.n_enc_layers + cfg.n_dec_layers,
+              "encdec": cfg.n_enc_layers + cfg.n_dec_layers}[cfg.family]
+    if cfg.family in ("audio", "encdec"):
+        # decoder self-attn over s; encoder over enc_seq (usually naive)
+        layers = cfg.n_dec_layers
+    f_pair = 4.0 * bsz * bq * bk * hq * hd
+    b_pair = bsz * (bq + 2 * bk) * hq * hd * 2.0     # q + kv tiles, bf16
+    mult = 1.0
+    if shape.kind == TRAIN:
+        # fwd + (full remat ? recompute : 0) + bwd(2x)
+        mult = 4.0 if settings.get("remat") == "full" else 3.0
+    extra_pairs = max(0, pairs - 1) * layers
+    return (extra_pairs * f_pair * mult / n_devices,
+            extra_pairs * b_pair * mult / n_devices)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N active."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n = cfg.active_param_count()
+    if shape.kind == TRAIN:
+        return 6.0 * n * shape.tokens
+    return 2.0 * n * shape.tokens
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_dev: float
+    bytes_dev: float
+    coll_dev: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    note: str
+
+
+NOTES = {
+    "compute": ("compute-bound: raise arithmetic efficiency (causal-only "
+                "attention, grouped MoE GEMM, remat policy)"),
+    "memory": ("HBM-bound: shrink resident bytes/step (KV dtype, paging, "
+               "fewer cache re-reads, better fusion)"),
+    "collective": ("ICI-bound: cut or overlap collectives (reshard, 1D "
+                   "weight layout, gradient compression, async)"),
+}
+
+
+def extrapolate(ra: Dict, rb: Dict) -> Dict:
+    """Finite-difference depth extrapolation: every cost component is
+    affine in depth (identical layers), so two reduced-depth unrolled
+    compiles determine (per-layer, constant) exactly; totals are
+    reconstructed at the full depth.  Cross-validated against full-depth
+    unrolled compiles in tests/test_roofline_accounting.py and against
+    the 5 full-depth artifacts kept in results/dryrun_count/."""
+    a = ra["depth_override"]
+    b = rb["depth_override"]
+    cfg = get_config(ra["arch"])
+    L = cfg.num_layers
+
+    def lerp(fa, fb):
+        unit = (fb - fa) / (b - a)
+        const = fb - b * unit
+        return max(0.0, const + L * unit)
+
+    out = json.loads(json.dumps(rb))        # deep copy of the b-run
+    out.pop("depth_override")
+    for k in ("flops", "bytes accessed", "transcendentals"):
+        if k in rb.get("cost", {}) and k in ra.get("cost", {}):
+            out["cost"][k] = lerp(ra["cost"][k], rb["cost"][k])
+    ca, cb = ra["collectives"], rb["collectives"]
+    for kind in cb:
+        if isinstance(cb[kind], dict):
+            out["collectives"][kind]["bytes"] = lerp(
+                ca[kind]["bytes"], cb[kind]["bytes"])
+            out["collectives"][kind]["count"] = lerp(
+                ca[kind]["count"], cb[kind]["count"])
+    out["collectives"]["total_bytes"] = lerp(ca["total_bytes"],
+                                             cb["total_bytes"])
+    return out
+
+
+def load_cell(path: str) -> Optional[Cell]:
+    return cell_from_record(json.load(open(path)))
+
+
+def _analytic_decode_cost(arch: str, shape_name: str, n_devices: int):
+    """Decode-cell compute/bytes from the operator graph (per device).
+
+    At decode sizes XLA's marginal per-layer flops / bytes-accessed are
+    dominated by fusion bookkeeping and are NOT depth-affine (measured:
+    2-4x spread between probe and full-depth compiles of the same cell,
+    while prefill/train agree to <8% and collectives exactly).  The
+    operator graph is the accounting the simulator itself is validated
+    on, so decode cells use it; collectives still come from the HLO."""
+    from repro.core.costmodel.operators import BatchMix, OperatorGraph
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    g = OperatorGraph.from_config(cfg, tp=16)     # per model-shard
+    mix = BatchMix.from_batch(
+        [], [shape.seq_len] * shape.global_batch,
+        enc_tokens=0)
+    f, b = g.totals(mix)
+    dp = n_devices // 16                          # batch sharded over data
+    return f / dp, b / dp
+
+
+def cell_from_record(r: Dict) -> Optional[Cell]:
+    if "skipped" in r or "error" in r:
+        return None
+    arch, shape = r["arch"], r["shape"]
+    nd = r["n_devices"]
+    settings = r.get("settings", {})
+    f_corr, b_corr = attn_correction(arch, shape, settings, nd)
+    flops = r["cost"].get("flops", 0.0) + f_corr
+    bts = r["cost"].get("bytes accessed", 0.0) + b_corr
+    if get_shape(shape).kind == DECODE:
+        flops, bts = _analytic_decode_cost(arch, shape, nd)
+    coll = r["collectives"]["total_bytes"]
+    terms = {"compute": flops / PEAK_FLOPS,
+             "memory": bts / HBM_BW,
+             "collective": coll / ICI_BW}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(arch, shape)
+    ratio = mf / max(flops * nd, 1.0)
+    return Cell(arch=arch, shape=shape, mesh=r["mesh"], n_devices=nd,
+                flops_dev=flops, bytes_dev=bts, coll_dev=coll,
+                compute_s=terms["compute"], memory_s=terms["memory"],
+                collective_s=terms["collective"], dominant=dom,
+                model_flops=mf, useful_ratio=ratio, note=NOTES[dom])
+
+
+def build_table(dirname: str, pattern: str = "*_single_*.json"):
+    """Builds cells from depth-probe pairs (``*_dA/_dB.json``) when
+    present, else from single full-depth artifacts."""
+    by_cell: Dict[str, Dict[int, Dict]] = {}
+    singles = []
+    for path in sorted(glob.glob(os.path.join(dirname, pattern))):
+        r = json.load(open(path))
+        if "skipped" in r or "error" in r:
+            continue
+        if "depth_override" in r:
+            key = f'{r["arch"]}|{r["shape"]}|{r["mesh"]}'
+            by_cell.setdefault(key, {})[r["depth_override"]] = r
+        else:
+            singles.append(r)
+    cells = []
+    for key, runs in sorted(by_cell.items()):
+        if len(runs) < 2:
+            continue
+        ds = sorted(runs)
+        c = cell_from_record(extrapolate(runs[ds[0]], runs[ds[-1]]))
+        if c:
+            cells.append(c)
+    probed = {(c.arch, c.shape, c.mesh) for c in cells}
+    for r in singles:
+        if (r["arch"], r["shape"], r["mesh"]) not in probed:
+            c = cell_from_record(r)
+            if c:
+                cells.append(c)
+    cells.sort(key=lambda c: (c.arch, c.shape))
+    return cells
+
+
+def to_markdown(cells, title="Roofline (single-pod 16x16, per chip)"):
+    lines = [f"### {title}", "",
+             "| arch | shape | compute_s | memory_s | collective_s | "
+             "dominant | MODEL_FLOPS | useful | bottleneck note |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        lines.append(
+            f"| {c.arch} | {c.shape} | {c.compute_s:.3e} | "
+            f"{c.memory_s:.3e} | {c.collective_s:.3e} | {c.dominant} | "
+            f"{c.model_flops:.3e} | {c.useful_ratio:.2f} | {c.note} |")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(RESULTS, "dryrun_probe"))
+    ap.add_argument("--pattern", default="*_single_*.json")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    cells = build_table(args.dir, args.pattern)
+    md = to_markdown(cells)
+    print(md)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md + "\n")
+    print(f"\nroofline_report,{len(cells)},cells")
+
+
+if __name__ == "__main__":
+    main()

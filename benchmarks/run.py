@@ -1,0 +1,72 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints one CSV line per benchmark: ``name,us_per_call,derived`` where
+``derived`` carries the reproduced finding. Full row data lands in
+results/bench/*.csv.  ``--quick`` shrinks request counts (CI).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args(argv)
+    q = args.quick
+
+    from benchmarks import (batching, disagg_ratio, disagg_validation,
+                            hardware_sub, mem_footprint, memcache, memratio,
+                            platform_sweep, sim_speed, validation)
+
+    benches = [
+        ("validation", lambda: validation.run(n_req=20 if q else 40)),
+        ("sim_speed", lambda: sim_speed.run(
+            request_counts=(10, 20) if q else (20, 40, 60, 80, 100))),
+        ("disagg_validation", lambda: disagg_validation.run(
+            counts=(8, 16) if q else (10, 20, 40, 60))),
+        ("batching", lambda: batching.run(n_req=300 if q else 2000)),
+        ("memratio", lambda: memratio.run(n_req=400 if q else 2000)),
+        ("disagg_ratio", lambda: disagg_ratio.run(n_req=150 if q else 600)),
+        ("hardware_sub", lambda: hardware_sub.run(n_req=150 if q else 500)),
+        ("mem_footprint", lambda: mem_footprint.run(
+            n_req=300 if q else 1500)),
+        ("memcache", lambda: memcache.run(n_req=300 if q else 1200)),
+        ("platform_sweep", lambda: platform_sweep.run(
+            n_req=200 if q else 800)),
+    ]
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in benches:
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception:                               # noqa: BLE001
+            failed += 1
+            print(f"{name},ERROR,", file=sys.stdout)
+            traceback.print_exc()
+    # roofline report appends its own line if artifacts exist
+    try:
+        import os
+        from benchmarks import roofline_report
+        d = os.path.join(roofline_report.RESULTS, "dryrun_probe")
+        if os.path.isdir(d) and os.listdir(d):
+            cells = roofline_report.build_table(d)
+            md = roofline_report.to_markdown(cells)
+            out = os.path.join(roofline_report.RESULTS, "roofline.md")
+            with open(out, "w") as f:
+                f.write(md + "\n")
+            print(f"roofline_report,{len(cells)},cells->results/roofline.md")
+    except Exception:                                   # noqa: BLE001
+        traceback.print_exc()
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,85 @@
+"""Paper Table II + Fig. 6: simulation accuracy for fixed-length
+workloads at growing request counts, and simulator runtime efficiency.
+
+Vidur / LLMServingSim are not available offline; the comparison here is
+TokenSim vs the real engine ("Local" in Table II) plus TokenSim's own
+wall-clock scaling (the Fig. 6 claim is that TokenSim needs no
+pre-training pass and stays lightweight)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.metrics import Results
+from repro.core.simulator import SimSpec, Simulation, WorkerSpec
+from repro.core.mem.block_manager import BlockManager, MemoryConfig
+from repro.core.workload import WorkloadSpec
+from repro.models import model_zoo as zoo
+from repro.serving.engine import EngineConfig, ServingEngine
+
+from benchmarks.common import Bench, fmt
+
+NUM_BLOCKS, BLOCK_SIZE, MAX_BATCH = 160, 8, 8
+
+
+def run(request_counts=(20, 40, 60, 80, 100)):
+    b = Bench("sim_speed_tab2_fig6")
+    cfg = get_smoke_config("llama2-7b")
+    model = zoo.build(cfg)
+    params = zoo.init_params(model, jax.random.key(0))
+
+    # calibrate once on the smallest count; first pass warms the jit
+    # cache so measured walls are compute, not compilation
+    from repro.core.workload import generate
+    wl0 = WorkloadSpec(num_requests=request_counts[0], qps=0.0, seed=99,
+                       lengths="fixed", prompt_len=32, output_len=10)
+    samples = None
+    for _ in range(2):
+        eng0 = ServingEngine(model, params, EngineConfig(
+            num_blocks=NUM_BLOCKS, block_size=BLOCK_SIZE,
+            max_batch=MAX_BATCH, max_pages_per_seq=16))
+        for r in generate(wl0):
+            eng0.add_request(r)
+        eng0.run()
+        samples = [(r.mix, r.wall) for r in eng0.records]
+
+    max_err = 0.0
+    for n in request_counts:
+        wl = WorkloadSpec(num_requests=n, qps=0.0, seed=1,
+                          lengths="fixed", prompt_len=32, output_len=10)
+        # real engine total time
+        eng = ServingEngine(model, params, EngineConfig(
+            num_blocks=NUM_BLOCKS, block_size=BLOCK_SIZE,
+            max_batch=MAX_BATCH, max_pages_per_seq=16))
+        t0 = time.perf_counter()
+        for r in generate(wl):
+            eng.add_request(r)
+        eng.run()
+        real_total = eng.clock
+        real_wall = time.perf_counter() - t0
+
+        spec = SimSpec(arch=cfg, workers=[WorkerSpec(hw="CPU")],
+                       workload=wl, local_policy="continuous",
+                       max_batch=MAX_BATCH, backend="tabular",
+                       backend_samples=samples, block_size=BLOCK_SIZE)
+        sim = Simulation(spec)
+        sim.workers[0].mem = BlockManager(MemoryConfig(
+            num_blocks=NUM_BLOCKS, block_size=BLOCK_SIZE,
+            kv_bytes_per_token=1.0))
+        res = sim.run()
+        sim_total = max(r.t_finish for r in res.finished)
+        err = abs(sim_total - real_total) / real_total * 100
+        max_err = max(max_err, err)
+        b.add(requests=n, real_total_s=fmt(real_total),
+              sim_total_s=fmt(sim_total), pct_err=fmt(err, 2),
+              sim_wall_s=fmt(res.wall_time),
+              real_wall_s=fmt(real_wall),
+              speedup=fmt(real_wall / max(res.wall_time, 1e-9), 1))
+    b.finish(derived=f"max_total_time_err={max_err:.2f}%_no_pretraining")
+    return max_err
+
+
+if __name__ == "__main__":
+    run()

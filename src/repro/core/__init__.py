@@ -1,0 +1,13 @@
+"""TokenSim core: the paper's contribution — a modular, extensible
+discrete-event simulator for LLM inference systems.
+
+Layers (bottom-up): engine (DES kernel) -> request/workload -> costmodel
+(hardware + operator graph + backends) -> mem (block manager, memory
+pool) -> comm -> sched (global/local) -> worker -> simulator facade.
+"""
+from repro.core.engine import Environment  # noqa: F401
+from repro.core.request import Request, State  # noqa: F401
+from repro.core.workload import WorkloadSpec, generate  # noqa: F401
+from repro.core.metrics import Results  # noqa: F401
+from repro.core.simulator import (SimSpec, WorkerSpec, FaultSpec,  # noqa: F401
+                                  Simulation, simulate)

@@ -1,0 +1,58 @@
+"""Hardware models.
+
+Chips are modeled by peak dense FLOP/s, HBM bandwidth/capacity and link
+bandwidths — the same abstraction the paper (and GenZ) uses.  GPU entries
+reproduce the paper's case studies; TPU v5e is the real deployment target
+of this repo, and the PIM entry follows the paper's GDDR6-AiM setting
+(Fig. 12): a memory-centric part whose effective bandwidth, not FLOPs, is
+the selling point.  ``price`` is relative to A100 = 1.0 (used by the
+Fig. 12 budget analysis).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    flops: float            # peak dense FLOP/s (fp16/bf16 tensor)
+    mem_bw: float           # HBM bytes/s
+    mem_cap: float          # HBM bytes
+    link_bw: float          # inter-device bytes/s (NVLink / ICI per link)
+    pcie_bw: float = 32e9   # host link bytes/s
+    price: float = 1.0      # relative to A100
+    # achievable fractions (empirical efficiency of dense kernels):
+    flops_eff: float = 0.62
+    bw_eff: float = 0.82
+    # fixed per-iteration overhead (framework + launch), seconds
+    iter_overhead: float = 4.0e-3
+
+    def with_(self, **kw) -> "HardwareSpec":
+        return replace(self, **kw)
+
+
+A100 = HardwareSpec("A100", flops=312e12, mem_bw=2.039e12, mem_cap=80e9,
+                    link_bw=300e9, price=1.0)
+A100_40G = A100.with_(name="A100-40G", mem_cap=40e9)
+#: the paper's "AL" — A100 with 1/4 peak FLOPS (Fig. 12)
+A100_LOW = A100.with_(name="A100-low", flops=312e12 / 4, price=0.9)
+V100 = HardwareSpec("V100", flops=125e12, mem_bw=0.9e12, mem_cap=32e9,
+                    link_bw=150e9, price=0.25)
+#: SK Hynix GDDR6-AiM accelerator card (paper's "G"): near-bank compute
+#: gives GDDR6 an effective ~16x internal bandwidth for GEMV-like decode
+#: ops. Modeled from the Hot Chips '34 figures at card level; the paper
+#: prices it at ~1/2 an A100.
+G6_AIM = HardwareSpec("G6-AiM", flops=26e12, mem_bw=2.0e12, mem_cap=32e9,
+                      link_bw=32e9, price=0.5)
+#: TPU v5e — the deployment target for the real runtime in this repo.
+TPU_V5E = HardwareSpec("TPUv5e", flops=197e12, mem_bw=819e9, mem_cap=16e9,
+                       link_bw=50e9, price=0.35)
+#: CPU host executing the real JAX engine in this container; calibrated
+#: via TabularBackend, the static numbers are only a seed.
+CPU_HOST = HardwareSpec("CPU", flops=2e11, mem_bw=40e9, mem_cap=32e9,
+                        link_bw=10e9, price=0.02, flops_eff=0.5, bw_eff=0.5,
+                        iter_overhead=1e-3)
+
+HARDWARE = {h.name: h for h in
+            [A100, A100_40G, A100_LOW, V100, G6_AIM, TPU_V5E, CPU_HOST]}

@@ -1,0 +1,2 @@
+from repro.core.mem.block_manager import BlockManager, MemoryConfig  # noqa: F401
+from repro.core.mem.memory_pool import MemoryPool, PoolConfig  # noqa: F401

@@ -1,0 +1,153 @@
+"""PagedAttention-style block-granular KV memory manager (paper §III-B).
+
+Tracks device memory at block / token / byte granularity.  The *same
+class* backs both the simulator's worker memory model and the real JAX
+serving engine's page allocator (repro.serving.engine) — one
+implementation, structurally validated against itself.
+
+Invariants (property-tested in tests/test_block_manager.py):
+  * a block belongs to at most one request (no sharing at this layer;
+    prefix sharing is the MemoryPool's job),
+  * free + Σ allocated == total,
+  * a request's blocks always cover ceil(context_len / block_size).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.request import Request
+
+
+@dataclass(frozen=True)
+class MemoryConfig:
+    num_blocks: int
+    block_size: int = 16                # tokens per block
+    #: bytes per KV token (byte-granularity reporting). 0 => attention-free
+    #: arch: one constant state slot per sequence instead of paged KV.
+    kv_bytes_per_token: float = 1.0
+    state_bytes_per_seq: float = 0.0    # SSM/hybrid constant per-seq state
+    watermark: float = 0.0              # reserve fraction for running reqs
+
+    @staticmethod
+    def from_model(cfg, hw_mem_bytes: float, *, block_size: int = 16,
+                   dtype_bytes: int = 2, tp: int = 1,
+                   gpu_mem_util: float = 0.9, watermark: float = 0.0,
+                   reserve_bytes: float = 0.0) -> "MemoryConfig":
+        """Size the KV pool like vLLM: (mem_util × capacity − params −
+        reserve) / block bytes."""
+        from repro.core.costmodel.operators import (kv_bytes_per_token,
+                                                    param_bytes,
+                                                    state_bytes_per_seq)
+        kvt = kv_bytes_per_token(cfg, dtype_bytes, tp)
+        sps = state_bytes_per_seq(cfg, dtype_bytes, tp)
+        budget = hw_mem_bytes * gpu_mem_util - param_bytes(
+            cfg, dtype_bytes, tp) - reserve_bytes
+        if kvt <= 0:                     # pure SSM: budget counts states
+            n = max(1, int(budget / max(sps, 1.0)))
+            return MemoryConfig(num_blocks=n, block_size=1,
+                                kv_bytes_per_token=0.0,
+                                state_bytes_per_seq=sps,
+                                watermark=watermark)
+        n = max(1, int(budget / (kvt * block_size)))
+        return MemoryConfig(num_blocks=n, block_size=block_size,
+                            kv_bytes_per_token=kvt,
+                            state_bytes_per_seq=sps, watermark=watermark)
+
+
+class BlockManager:
+    def __init__(self, mc: MemoryConfig):
+        self.mc = mc
+        self.free_blocks: List[int] = list(range(mc.num_blocks))
+        self.free_blocks.reverse()       # pop() yields 0,1,2,... order
+        self.tables: Dict[int, List[int]] = {}   # req id -> physical blocks
+        self.token_counts: Dict[int, int] = {}   # req id -> resident tokens
+        self.peak_used = 0
+
+    # -- capacity queries -------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self.free_blocks)
+
+    @property
+    def num_used(self) -> int:
+        return self.mc.num_blocks - self.num_free
+
+    def usage(self) -> float:
+        return self.num_used / max(1, self.mc.num_blocks)
+
+    def used_bytes(self) -> float:
+        if self.mc.kv_bytes_per_token:
+            return self.num_used * self.mc.block_size * \
+                self.mc.kv_bytes_per_token
+        return self.num_used * self.mc.state_bytes_per_seq
+
+    def blocks_needed(self, tokens: int) -> int:
+        if self.mc.kv_bytes_per_token <= 0:      # SSM: 1 slot per seq
+            return 1
+        return math.ceil(max(1, tokens) / self.mc.block_size)
+
+    def can_allocate(self, tokens: int, *, respect_watermark: bool = False,
+                     headroom_tokens: int = 0) -> bool:
+        need = self.blocks_needed(tokens + headroom_tokens)
+        avail = self.num_free
+        if respect_watermark and self.mc.watermark > 0:
+            avail -= int(self.mc.watermark * self.mc.num_blocks)
+        return need <= avail
+
+    # -- allocation -------------------------------------------------------
+    def allocate(self, req: Request, tokens: int,
+                 reserve: int = 0) -> List[int]:
+        """Allocate blocks covering ``tokens`` (+ ``reserve`` headroom
+        tokens, used by static batching to pre-book the whole output)."""
+        assert req.id not in self.tables, f"req {req.id} already allocated"
+        need = self.blocks_needed(tokens + reserve)
+        if need > self.num_free:
+            raise MemoryError(f"OOM: need {need}, free {self.num_free}")
+        blocks = [self.free_blocks.pop() for _ in range(need)]
+        self.tables[req.id] = blocks
+        self.token_counts[req.id] = tokens
+        self.peak_used = max(self.peak_used, self.num_used)
+        return blocks
+
+    def can_append(self, req: Request, n: int = 1) -> bool:
+        cur = self.token_counts.get(req.id, 0)
+        have = len(self.tables.get(req.id, ())) * self.mc.block_size
+        if self.mc.kv_bytes_per_token <= 0:
+            return True                           # constant state
+        need = self.blocks_needed(cur + n) - self.blocks_needed(cur) \
+            if cur + n > have else 0
+        return need <= self.num_free
+
+    def append_tokens(self, req: Request, n: int = 1) -> None:
+        """Grow req's context by n tokens, taking new blocks as needed."""
+        assert req.id in self.tables, f"req {req.id} not resident"
+        if self.mc.kv_bytes_per_token <= 0:
+            self.token_counts[req.id] += n
+            return
+        cur = self.token_counts[req.id]
+        blocks = self.tables[req.id]
+        need = self.blocks_needed(cur + n) - len(blocks)
+        if need > self.num_free:
+            raise MemoryError(f"OOM appending: need {need}")
+        for _ in range(max(0, need)):
+            blocks.append(self.free_blocks.pop())
+        self.token_counts[req.id] = cur + n
+        self.peak_used = max(self.peak_used, self.num_used)
+
+    def free(self, req: Request) -> int:
+        """Release all blocks of req; returns #blocks released."""
+        blocks = self.tables.pop(req.id, [])
+        self.token_counts.pop(req.id, None)
+        self.free_blocks.extend(reversed(blocks))
+        return len(blocks)
+
+    def resident(self, req: Request) -> bool:
+        return req.id in self.tables
+
+    def block_table(self, req: Request) -> List[int]:
+        return self.tables[req.id]
+
+    def resident_tokens(self, req: Request) -> int:
+        return self.token_counts.get(req.id, 0)

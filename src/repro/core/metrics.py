@@ -1,0 +1,112 @@
+"""Metrics: the dynamic outputs the paper argues single-shot simulators
+cannot produce — latency distributions, CDFs, SLO goodput, memory-over-
+time — computed from the per-request records."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.request import Request
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    k = (len(s) - 1) * p / 100.0
+    lo, hi = int(math.floor(k)), int(math.ceil(k))
+    if lo == hi:
+        return s[lo]
+    return s[lo] + (s[hi] - s[lo]) * (k - lo)
+
+
+def cdf_points(xs: Sequence[float], n: int = 100) -> List[Tuple[float, float]]:
+    if not xs:
+        return []
+    s = sorted(xs)
+    return [(s[min(len(s) - 1, int(i * len(s) / n))], i / n)
+            for i in range(n + 1)]
+
+
+@dataclass
+class Results:
+    requests: List[Request]
+    sim_time: float
+    worker_mem: Dict[int, list] = field(default_factory=dict)
+    pool_stats: Optional[dict] = None
+    wall_time: float = 0.0
+    events: int = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def finished(self) -> List[Request]:
+        return [r for r in self.requests if r.t_finish is not None]
+
+    def throughput(self) -> float:
+        """Finished requests per second of simulated time."""
+        f = self.finished
+        if not f:
+            return 0.0
+        span = max(r.t_finish for r in f) - min(r.arrival_time for r in f)
+        return len(f) / max(span, 1e-9)
+
+    def token_throughput(self) -> float:
+        f = self.finished
+        if not f:
+            return 0.0
+        span = max(r.t_finish for r in f) - min(r.arrival_time for r in f)
+        return sum(r.tokens_generated for r in f) / max(span, 1e-9)
+
+    def latencies(self) -> List[float]:
+        return [r.latency for r in self.finished]
+
+    def normalized_latencies(self) -> List[float]:
+        return [r.normalized_latency for r in self.finished]
+
+    def ttfts(self) -> List[float]:
+        return [r.ttft for r in self.finished if r.ttft is not None]
+
+    def latency_stats(self) -> Dict[str, float]:
+        lats = self.latencies()
+        return {"p50": percentile(lats, 50), "p90": percentile(lats, 90),
+                "p99": percentile(lats, 99),
+                "max": max(lats) if lats else float("nan"),
+                "mean": sum(lats) / len(lats) if lats else float("nan")}
+
+    def latency_cdf(self, n: int = 100):
+        return cdf_points(self.latencies(), n)
+
+    def slo_goodput(self, *, ttft_slo: float = 0.0,
+                    mtpot_slo: float = 0.0) -> float:
+        """Requests/s that met their SLOs (paper's goodput metric)."""
+        ok = [r for r in self.finished
+              if r.meets_slo(ttft_slo, mtpot_slo)]
+        if not ok:
+            return 0.0
+        span = max(r.t_finish for r in self.finished) - \
+            min(r.arrival_time for r in self.finished)
+        return len(ok) / max(span, 1e-9)
+
+    def preemption_rate(self) -> float:
+        n = len(self.requests)
+        return sum(r.preempt_count for r in self.requests) / max(1, n)
+
+    def summary(self, *, ttft_slo: float = 0.0,
+                mtpot_slo: float = 0.0) -> Dict[str, float]:
+        out = {"throughput_rps": self.throughput(),
+               "throughput_tps": self.token_throughput(),
+               "n_finished": len(self.finished),
+               "preempt_rate": self.preemption_rate(),
+               "sim_time": self.sim_time}
+        out.update({f"latency_{k}": v
+                    for k, v in self.latency_stats().items()})
+        tt = self.ttfts()
+        out["ttft_p50"] = percentile(tt, 50)
+        out["ttft_p99"] = percentile(tt, 99)
+        if ttft_slo or mtpot_slo:
+            out["goodput_rps"] = self.slo_goodput(
+                ttft_slo=ttft_slo, mtpot_slo=mtpot_slo)
+        if self.pool_stats:
+            out.update({f"pool_{k}": v for k, v in self.pool_stats.items()})
+        return out

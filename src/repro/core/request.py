@@ -1,0 +1,102 @@
+"""Request objects and lifecycle states."""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+class State(enum.Enum):
+    QUEUED = "queued"          # at global scheduler
+    WAITING = "waiting"        # in a worker's local queue
+    PREFILL = "prefill"
+    MIGRATING = "migrating"    # KV in flight between workers (disagg)
+    DECODE = "decode"
+    PREEMPTED = "preempted"    # swapped out / pending recompute
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    id: int
+    arrival_time: float
+    prompt_len: int
+    output_len: int                      # target new tokens (incl. first)
+
+    # multi-round conversation support
+    session_id: Optional[int] = None
+    round_idx: int = 0
+    history_len: int = 0                 # tokens of prior rounds (KV reusable)
+
+    # runtime state
+    state: State = State.QUEUED
+    tokens_generated: int = 0
+    cached_len: int = 0                  # prefix KV reused from a pool
+    prefill_done_len: int = 0            # chunked prefill progress
+    worker_id: Optional[int] = None
+    preempt_count: int = 0
+
+    # timestamps
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+    token_times: List[float] = field(default_factory=list)
+
+    @property
+    def context_len(self) -> int:
+        """Tokens whose KV must be resident to decode the next token."""
+        return self.prompt_len + self.tokens_generated
+
+    @property
+    def prefill_target(self) -> int:
+        """Tokens that must be prefilled before decode: the prompt, plus
+        previously generated tokens after a recompute-preemption (vLLM
+        recompute mode re-prefills them as part of the context)."""
+        base = self.prompt_len
+        if self.prefill_done_len < self.prompt_len and self.tokens_generated:
+            base += self.tokens_generated
+        return base
+
+    @property
+    def remaining_prefill(self) -> int:
+        return max(0, self.prefill_target
+                   - max(self.cached_len, self.prefill_done_len))
+
+    @property
+    def finished(self) -> bool:
+        return self.tokens_generated >= self.output_len
+
+    # -- metrics ---------------------------------------------------------
+    @property
+    def latency(self) -> Optional[float]:
+        return None if self.t_finish is None \
+            else self.t_finish - self.arrival_time
+
+    @property
+    def normalized_latency(self) -> Optional[float]:
+        """vLLM's metric: end-to-end latency / output length."""
+        lat = self.latency
+        return None if lat is None else lat / max(1, self.output_len)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return None if self.t_first_token is None \
+            else self.t_first_token - self.arrival_time
+
+    @property
+    def max_tpot(self) -> Optional[float]:
+        """Max inter-token interval (mTPOT) over the decode phase."""
+        if len(self.token_times) < 2:
+            return 0.0 if self.token_times else None
+        return max(b - a for a, b in zip(self.token_times,
+                                         self.token_times[1:]))
+
+    def meets_slo(self, ttft_slo: float, mtpot_slo: float) -> bool:
+        if self.t_finish is None:
+            return False
+        if self.ttft is not None and ttft_slo and self.ttft > ttft_slo:
+            return False
+        if mtpot_slo:
+            mt = self.max_tpot
+            if mt is not None and mt > mtpot_slo:
+                return False
+        return True

@@ -1,0 +1,6 @@
+from repro.core.sched.local import (  # noqa: F401
+    IterationPlan, LocalScheduler, StaticBatching, ContinuousBatching,
+    make_local_scheduler)
+from repro.core.sched.global_sched import (  # noqa: F401
+    GlobalScheduler, RoundRobin, LeastLoaded, DisaggPD, SessionAffinity,
+    make_global_scheduler)

@@ -1,0 +1,126 @@
+"""Global (cluster) schedulers: request -> worker dispatch (paper §III-A).
+
+Policies receive the full worker list (hardware type, role flags, queue
+and memory state — "all system information") and may keep their own state
+(the record-book pattern from the paper).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.request import Request
+
+
+class GlobalScheduler:
+    def assign(self, req: Request, workers: List) -> int:
+        """Pick the worker for a new request (prefill side)."""
+        raise NotImplementedError
+
+    def reassign(self, req: Request, workers: List) -> int:
+        """Pick the decode worker after prefill hand-off (disagg). The
+        default keeps the request where it is."""
+        return req.worker_id
+
+
+def _eligible(workers, *, prefill=None, decode=None):
+    out = []
+    for w in workers:
+        if not w.alive:
+            continue
+        if prefill is not None and w.run_prefill != prefill:
+            continue
+        if decode is not None and w.run_decode != decode:
+            continue
+        out.append(w)
+    return out or [w for w in workers if w.alive]
+
+
+@dataclass
+class RoundRobin(GlobalScheduler):
+    _next: int = 0
+
+    def assign(self, req, workers):
+        ws = _eligible(workers, prefill=True)
+        w = ws[self._next % len(ws)]
+        self._next += 1
+        return w.wid
+
+
+@dataclass
+class LeastLoaded(GlobalScheduler):
+    """Dispatch to the worker with the fewest queued+running tokens —
+    also the straggler mitigation policy: a slowed worker drains and
+    stops receiving new work."""
+
+    def assign(self, req, workers):
+        ws = _eligible(workers, prefill=True)
+        return min(ws, key=lambda w: (w.load_tokens(), w.wid)).wid
+
+    def reassign(self, req, workers):
+        ws = _eligible(workers, decode=True)
+        return min(ws, key=lambda w: (w.load_tokens(), w.wid)).wid
+
+
+@dataclass
+class DisaggPD(GlobalScheduler):
+    """Disaggregated prefill/decode: new requests round-robin over
+    prefill workers; after the first token they move to the least-loaded
+    decode worker (the paper's Fig. 3 user-defined example)."""
+
+    _next_p: int = 0
+
+    def assign(self, req, workers):
+        ws = _eligible(workers, prefill=True)
+        w = ws[self._next_p % len(ws)]
+        self._next_p += 1
+        return w.wid
+
+    def reassign(self, req, workers):
+        ws = _eligible(workers, decode=True)
+        return min(ws, key=lambda w: (w.load_tokens(), w.wid)).wid
+
+
+@dataclass
+class SessionAffinity(GlobalScheduler):
+    """Multi-round conversations stick to the worker that holds their KV
+    in the pool tier (locality-aware, MemServe-style)."""
+
+    fallback: GlobalScheduler = field(default_factory=LeastLoaded)
+    _session_map: Dict[int, int] = field(default_factory=dict)
+
+    def assign(self, req, workers):
+        if req.session_id is not None and req.session_id in self._session_map:
+            wid = self._session_map[req.session_id]
+            if any(w.wid == wid and w.alive for w in workers):
+                return wid
+        wid = self.fallback.assign(req, workers)
+        if req.session_id is not None:
+            self._session_map[req.session_id] = wid
+        return wid
+
+    def reassign(self, req, workers):
+        return self.fallback.reassign(req, workers)
+
+
+@dataclass
+class HeterogeneityAware(GlobalScheduler):
+    """Weights prefill dispatch by FLOPs and decode dispatch by memory
+    bandwidth — the cross-stack policy the paper motivates for clusters
+    of mixed accelerators (A100 + PIM, Fig. 12)."""
+
+    def assign(self, req, workers):
+        ws = _eligible(workers, prefill=True)
+        return min(ws, key=lambda w:
+                   (w.load_tokens() / max(w.hw.flops, 1.0), w.wid)).wid
+
+    def reassign(self, req, workers):
+        ws = _eligible(workers, decode=True)
+        return min(ws, key=lambda w:
+                   (w.load_tokens() / max(w.hw.mem_bw, 1.0), w.wid)).wid
+
+
+def make_global_scheduler(kind: str, **kw) -> GlobalScheduler:
+    return {"round_robin": RoundRobin, "least_loaded": LeastLoaded,
+            "disagg": DisaggPD, "session_affinity": SessionAffinity,
+            "hetero": HeterogeneityAware}[kind](**kw)

@@ -1,0 +1,169 @@
+"""Local (per-worker) schedulers: static vs continuous batching, chunked
+prefill, and the prefill/decode-only restrictions for disaggregation.
+
+A policy builds an ``IterationPlan`` from the worker's waiting queue,
+running set and memory manager — the full system state, per the paper's
+"scheduler function API provides all system information".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core.request import Request, State
+
+
+@dataclass
+class IterationPlan:
+    #: (req, chunk_len, ctx_before) — prompt tokens computed this iteration
+    prefill: List[Tuple[Request, int, int]] = field(default_factory=list)
+    decode: List[Request] = field(default_factory=list)
+    admitted: List[Request] = field(default_factory=list)
+    preempted: List[Request] = field(default_factory=list)
+    retrieve_latency: float = 0.0        # memory-pool fetches this iter
+
+    @property
+    def empty(self) -> bool:
+        return not (self.prefill or self.decode)
+
+
+class LocalScheduler:
+    """Override ``plan``.  Subclasses may keep state (paper: "stateful")."""
+
+    def plan(self, worker) -> IterationPlan:   # worker: core.worker.Worker
+        raise NotImplementedError
+
+
+@dataclass
+class StaticBatching(LocalScheduler):
+    """Classic static batching: fill a batch, run it to completion, only
+    then admit the next batch (the paper's Fig. 8 upper timeline)."""
+
+    max_batch: int = 32
+
+    def plan(self, worker) -> IterationPlan:
+        plan = IterationPlan()
+        running = [r for r in worker.running if not r.finished]
+        if not running:
+            # batch finished: admit a fresh one (reserving room for each
+            # request's full output — static batching predates paging)
+            while worker.waiting and len(plan.admitted) < self.max_batch:
+                req = worker.waiting[0]
+                ctx = max(1, req.context_len)
+                if not worker.mem.can_allocate(
+                        ctx, headroom_tokens=req.output_len):
+                    break
+                worker.waiting.popleft()
+                worker.mem.allocate(req, ctx, reserve=req.output_len)
+                plan.admitted.append(req)
+            running = plan.admitted
+        for r in running:
+            if r.remaining_prefill > 0:
+                plan.prefill.append((r, r.remaining_prefill,
+                                     max(r.cached_len, r.prefill_done_len)))
+            else:
+                plan.decode.append(r)
+        # static batching: prefill everything first, then pure decode
+        if plan.prefill:
+            plan.decode = []
+        return plan
+
+
+@dataclass
+class ContinuousBatching(LocalScheduler):
+    """vLLM-style continuous batching with optional chunked prefill.
+
+    * admits new requests whenever batch slots + memory allow, respecting
+      the ``max_mem_ratio`` admission cap (Fig. 10's knob: the watermark
+      lives in the worker's MemoryConfig),
+    * prefill-prioritized iterations (vLLM v0) unless ``chunked_prefill``
+      mixes one prefill chunk with running decodes (Sarathi-style —
+      beyond-paper option),
+    * preempts the newest running request on decode OOM (recompute mode).
+    """
+
+    max_batch: int = 256
+    max_batched_tokens: int = 2048
+    chunked_prefill: bool = False
+    prefill_chunk: int = 512
+
+    def plan(self, worker) -> IterationPlan:
+        plan = IterationPlan()
+        mem = worker.mem
+
+        # ---- admission ------------------------------------------------
+        n_running = len(worker.running)
+        while worker.waiting and n_running + len(plan.admitted) < self.max_batch:
+            req = worker.waiting[0]
+            need = max(1, req.context_len)
+            if req.cached_len == 0 and worker.pool is not None \
+                    and req.history_len > 0:
+                reuse, lat = worker.pool.lookup(req)
+                req.cached_len = reuse
+                plan.retrieve_latency = max(plan.retrieve_latency, lat)
+            if not mem.can_allocate(need, respect_watermark=True):
+                break
+            worker.waiting.popleft()
+            mem.allocate(req, need)
+            plan.admitted.append(req)
+
+        running = [r for r in worker.running if not r.finished] \
+            + plan.admitted
+        prefills = [r for r in running if r.remaining_prefill > 0]
+        decodes = [r for r in running if r.remaining_prefill == 0]
+
+        # ---- build the iteration ---------------------------------------
+        budget = self.max_batched_tokens
+        if prefills and not self.chunked_prefill:
+            # prefill-prioritized iteration (no decodes mixed in)
+            for r in sorted(prefills, key=lambda r: r.arrival_time):
+                chunk = min(r.remaining_prefill, budget)
+                if chunk <= 0:
+                    break
+                plan.prefill.append(
+                    (r, chunk, max(r.cached_len, r.prefill_done_len)))
+                budget -= chunk
+            return plan
+
+        if self.chunked_prefill and prefills:
+            budget -= len(decodes)        # decodes cost 1 token each
+            r = min(prefills, key=lambda r: r.arrival_time)
+            chunk = min(r.remaining_prefill, self.prefill_chunk,
+                        max(0, budget))
+            if chunk > 0:
+                plan.prefill.append(
+                    (r, chunk, max(r.cached_len, r.prefill_done_len)))
+
+        # ---- decodes, preempting on OOM (newest first) ------------------
+        decodes.sort(key=lambda r: (r.arrival_time, r.id))
+        survivors: List[Request] = list(decodes)
+
+        # check appends feasible; evict newest until they are
+        def total_new_blocks(reqs):
+            return sum(
+                mem.blocks_needed(mem.resident_tokens(r) + 1)
+                - len(mem.block_table(r)) for r in reqs
+                if mem.resident(r))
+
+        while survivors and total_new_blocks(survivors) > mem.num_free:
+            victim = survivors.pop()       # newest arrival
+            if victim in plan.admitted:
+                plan.admitted.remove(victim)
+            mem.free(victim)
+            victim.prefill_done_len = 0
+            victim.cached_len = 0
+            victim.preempt_count += 1
+            plan.preempted.append(victim)
+        plan.decode = survivors
+        return plan
+
+
+def make_local_scheduler(kind: str, **kw) -> LocalScheduler:
+    if kind == "static":
+        return StaticBatching(**{k: v for k, v in kw.items()
+                                 if k in ("max_batch",)})
+    if kind == "continuous":
+        return ContinuousBatching(**{k: v for k, v in kw.items() if k in (
+            "max_batch", "max_batched_tokens", "chunked_prefill",
+            "prefill_chunk")})
+    raise ValueError(f"unknown local scheduler {kind!r}")

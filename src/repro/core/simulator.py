@@ -1,0 +1,209 @@
+"""TokenSim facade: configure a cluster, run a workload, get Results.
+
+Mirrors the paper's Fig. 1/2: a dispatcher feeds a global scheduler that
+assigns requests to concurrently running workers; local schedulers batch
+between iterations; memory managers track device memory; a communication
+model prices inter-worker KV movement (disaggregation, Fig. 7); an
+optional memory pool serves multi-round conversations (Fig. 14); fault /
+straggler injection exercises the mitigation policies.
+"""
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig
+from repro.core import comm as comm_mod
+from repro.core.breakpoints import Hooks, disagg_hooks
+from repro.core.costmodel.backends import (CostBackend, RooflineBackend,
+                                           TabularBackend)
+from repro.core.costmodel.hardware import HARDWARE, HardwareSpec
+from repro.core.costmodel.operators import kv_bytes_per_token, \
+    state_bytes_per_seq
+from repro.core.engine import Environment
+from repro.core.mem.block_manager import MemoryConfig
+from repro.core.mem.memory_pool import MemoryPool, PoolConfig
+from repro.core.metrics import Results
+from repro.core.request import Request, State
+from repro.core.sched.global_sched import (GlobalScheduler,
+                                           make_global_scheduler)
+from repro.core.sched.local import make_local_scheduler
+from repro.core.worker import Worker
+from repro.core.workload import WorkloadSpec, generate
+
+
+@dataclass(frozen=True)
+class WorkerSpec:
+    hw: str = "A100"
+    role: str = "both"                  # both | prefill | decode
+    tp: int = 1
+    gpu_mem_util: float = 0.9
+    max_mem_ratio: float = 1.0          # admission cap (Fig. 10)
+    mem_cap_override: Optional[float] = None  # bytes (Fig. 13/15 sweeps)
+    hw_overrides: Dict[str, float] = field(default_factory=dict)
+    slowdown: float = 1.0
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    time: float
+    worker: int
+    kind: str                           # "slowdown" | "fail" | "recover"
+    factor: float = 1.0
+
+
+@dataclass
+class SimSpec:
+    arch: Union[str, ArchConfig] = "llama2-7b"
+    workers: Sequence[WorkerSpec] = (WorkerSpec(),)
+    workload: WorkloadSpec = field(default_factory=WorkloadSpec)
+    global_policy: str = "least_loaded"
+    local_policy: str = "continuous"
+    max_batch: int = 256
+    max_batched_tokens: int = 2048
+    chunked_prefill: bool = False
+    prefill_chunk: int = 512
+    block_size: int = 16
+    dtype_bytes: int = 2
+    pool: Optional[PoolConfig] = None
+    kv_link: comm_mod.LinkSpec = comm_mod.NVLINK
+    faults: Sequence[FaultSpec] = ()
+    backend: str = "roofline"
+    backend_samples: Optional[list] = None   # for tabular
+    backends_by_worker: Optional[Dict[int, CostBackend]] = None
+    until: Optional[float] = None
+
+
+class Simulation:
+    def __init__(self, spec: SimSpec):
+        self.spec = spec
+        self.cfg = spec.arch if isinstance(spec.arch, ArchConfig) \
+            else get_config(spec.arch)
+        self.env = Environment()
+        self.link = comm_mod.Link(self.env, spec.kv_link)
+        self.pool = MemoryPool(spec.pool) if spec.pool else None
+        self.requests: List[Request] = generate(spec.workload)
+        self.global_sched: GlobalScheduler = make_global_scheduler(
+            spec.global_policy)
+        self.workers: List[Worker] = []
+        self._build_workers()
+        self._n_finished = 0
+        self._kv_bytes_per_token = kv_bytes_per_token(
+            self.cfg, spec.dtype_bytes) or state_bytes_per_seq(
+            self.cfg, spec.dtype_bytes)
+
+    # ------------------------------------------------------------------
+    def _build_workers(self) -> None:
+        spec = self.spec
+        disagg = any(w.role != "both" for w in spec.workers)
+        for i, ws in enumerate(spec.workers):
+            hw = HARDWARE[ws.hw]
+            if ws.hw_overrides:
+                hw = hw.with_(**ws.hw_overrides)
+            if ws.mem_cap_override is not None:
+                hw = hw.with_(mem_cap=ws.mem_cap_override)
+            mem_cfg = MemoryConfig.from_model(
+                self.cfg, hw.mem_cap, block_size=spec.block_size,
+                dtype_bytes=spec.dtype_bytes, tp=ws.tp,
+                gpu_mem_util=ws.gpu_mem_util,
+                watermark=max(0.0, 1.0 - ws.max_mem_ratio))
+            if spec.backends_by_worker and i in spec.backends_by_worker:
+                backend = spec.backends_by_worker[i]
+            elif spec.backend == "tabular":
+                backend = TabularBackend.fit(spec.backend_samples)
+            else:
+                backend = RooflineBackend.for_model(
+                    self.cfg, hw, tp=ws.tp, dtype_bytes=spec.dtype_bytes)
+            sched = make_local_scheduler(
+                spec.local_policy, max_batch=spec.max_batch,
+                max_batched_tokens=spec.max_batched_tokens,
+                chunked_prefill=spec.chunked_prefill,
+                prefill_chunk=spec.prefill_chunk)
+            hooks = disagg_hooks() if disagg else Hooks()
+            enc_tokens = self.cfg.enc_seq_len \
+                if self.cfg.family in ("audio", "encdec") else 0
+            w = Worker(self.env, i, hw, backend, mem_cfg, sched,
+                       run_prefill=ws.role in ("both", "prefill"),
+                       run_decode=ws.role in ("both", "decode"),
+                       cluster=self, pool=self.pool, hooks=hooks,
+                       enc_tokens_per_req=enc_tokens)
+            w.slowdown = ws.slowdown
+            self.workers.append(w)
+
+    # ------------------------------------------------------------------
+    # cluster callbacks (used by workers/hooks)
+    def migrate(self, req: Request, from_worker: Worker) -> None:
+        """Move a prefilled request to a decode worker (KV over the link)."""
+        target_id = self.global_sched.reassign(req, self.workers)
+        if target_id == from_worker.wid:
+            return                          # stays: nothing to move
+        req.state = State.MIGRATING
+        nbytes = self._kv_bytes_per_token * max(1, req.context_len) \
+            if kv_bytes_per_token(self.cfg, self.spec.dtype_bytes) else \
+            state_bytes_per_seq(self.cfg, self.spec.dtype_bytes)
+        done = self.link.transfer(nbytes)
+        target = self.workers[target_id]
+
+        def on_done(_ev, req=req, fw=from_worker, tw=target):
+            fw.release(req)
+            tw.receive_migrated(req)
+
+        done.wait(on_done)
+
+    def on_request_finished(self, req: Request) -> None:
+        self._n_finished += 1
+
+    def redispatch(self, orphans: List[Request]) -> None:
+        for req in sorted(orphans, key=lambda r: r.id):
+            wid = self.global_sched.assign(req, self.workers)
+            self.workers[wid].submit(req)
+
+    # ------------------------------------------------------------------
+    def _dispatcher(self):
+        env = self.env
+        for req in self.requests:
+            delay = req.arrival_time - env.now
+            if delay > 0:
+                yield env.timeout(delay)
+            wid = self.global_sched.assign(req, self.workers)
+            self.workers[wid].submit(req)
+
+    def _fault_injector(self):
+        env = self.env
+        for f in sorted(self.spec.faults, key=lambda f: f.time):
+            delay = f.time - env.now
+            if delay > 0:
+                yield env.timeout(delay)
+            w = self.workers[f.worker]
+            if f.kind == "slowdown":
+                w.slowdown = f.factor
+            elif f.kind == "fail":
+                orphans = w.fail()
+                self.redispatch(orphans)
+            elif f.kind == "recover":
+                w.slowdown = 1.0
+                w.recover()
+            else:
+                raise ValueError(f.kind)
+
+    # ------------------------------------------------------------------
+    def run(self) -> Results:
+        t0 = _time.perf_counter()
+        self.env.process(self._dispatcher(), name="dispatcher")
+        if self.spec.faults:
+            self.env.process(self._fault_injector(), name="faults")
+        self.env.run(until=self.spec.until)
+        wall = _time.perf_counter() - t0
+        return Results(
+            requests=self.requests,
+            sim_time=self.env.now,
+            worker_mem={w.wid: w.mem_timeline for w in self.workers},
+            pool_stats=self.pool.stats() if self.pool else None,
+            wall_time=wall,
+            events=sum(w.iterations for w in self.workers))
+
+
+def simulate(spec: SimSpec) -> Results:
+    return Simulation(spec).run()

@@ -1,0 +1,200 @@
+"""Simulated inference worker: one accelerator running an iteration loop.
+
+The worker is a DES process: it asks its local scheduler for an
+``IterationPlan``, charges the cost model for the batch, advances
+simulated time, then applies the plan's effects (token emission, KV
+growth, finishes, preemptions) and fires breakpoints.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Tuple
+
+from repro.core.breakpoints import Hooks
+from repro.core.costmodel.backends import CostBackend
+from repro.core.costmodel.hardware import HardwareSpec
+from repro.core.costmodel.operators import BatchMix
+from repro.core.engine import Environment, Event
+from repro.core.mem.block_manager import BlockManager, MemoryConfig
+from repro.core.mem.memory_pool import MemoryPool
+from repro.core.request import Request, State
+from repro.core.sched.local import IterationPlan, LocalScheduler
+
+
+@dataclass
+class MemSample:
+    t: float
+    used_blocks: int
+    used_bytes: float
+    n_running: int
+
+
+class Worker:
+    def __init__(self, env: Environment, wid: int, hw: HardwareSpec,
+                 backend: CostBackend, mem_cfg: MemoryConfig,
+                 sched: LocalScheduler, *, run_prefill: bool = True,
+                 run_decode: bool = True, cluster=None,
+                 pool: Optional[MemoryPool] = None,
+                 hooks: Optional[Hooks] = None,
+                 enc_tokens_per_req: int = 0):
+        self.env = env
+        self.wid = wid
+        self.hw = hw
+        self.backend = backend
+        self.mem = BlockManager(mem_cfg)
+        self.sched = sched
+        self.run_prefill = run_prefill
+        self.run_decode = run_decode
+        self.cluster = cluster
+        self.pool = pool
+        self.hooks = hooks or Hooks()
+        self.enc_tokens_per_req = enc_tokens_per_req
+
+        self.waiting: Deque[Request] = deque()
+        self.running: List[Request] = []
+        self.alive = True
+        self.slowdown = 1.0
+        self.mem_timeline: List[MemSample] = []
+        self.iterations = 0
+        self.busy_time = 0.0
+        self._wake: Optional[Event] = None
+        self.proc = env.process(self._run(), name=f"worker{wid}")
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.worker_id = self.wid
+        req.state = State.WAITING
+        self.waiting.append(req)
+        self._wakeup()
+
+    def receive_migrated(self, req: Request) -> None:
+        """Request arrives with its KV already computed elsewhere: blocks
+        for the full context are allocated at admission; no prefill."""
+        req.worker_id = self.wid
+        req.state = State.WAITING
+        req.prefill_done_len = req.prefill_target
+        self.waiting.append(req)
+        self._wakeup()
+
+    def load_tokens(self) -> int:
+        return sum(max(1, r.remaining_prefill) + 1 for r in self.waiting) \
+            + sum(1 + r.context_len // 256 for r in self.running)
+
+    def _wakeup(self):
+        if self._wake is not None and not self._wake.triggered:
+            self._wake.succeed()
+
+    # ------------------------------------------------------------------
+    def _run(self):
+        env = self.env
+        while True:
+            if not self.alive:
+                self._wake = env.event()
+                yield self._wake
+                continue
+            self.hooks.fire("before_sched", self)
+            plan = self.sched.plan(self)
+            if plan.empty:
+                self._wake = env.event()
+                yield self._wake
+                continue
+
+            for req in plan.admitted:
+                req.state = State.PREFILL if req.remaining_prefill else \
+                    State.DECODE
+                if req not in self.running:
+                    self.running.append(req)
+                self.hooks.fire("on_admit", self, req)
+            for req in plan.preempted:
+                req.state = State.PREEMPTED
+                if req in self.running:
+                    self.running.remove(req)
+                self.waiting.appendleft(req)   # retry first (vLLM order)
+
+            # KV must grow before the decode step executes
+            for req in plan.decode:
+                self.mem.append_tokens(req, 1)
+
+            mix = BatchMix.from_batch(
+                [(c, b) for _, c, b in plan.prefill],
+                [r.context_len for r in plan.decode],
+                enc_tokens=self.enc_tokens_per_req * sum(
+                    1 for r, c, b in plan.prefill
+                    if b == 0))
+            t = self.backend.iteration_time(mix) * self.slowdown \
+                + plan.retrieve_latency
+            yield env.timeout(t)
+            now = env.now
+            self.iterations += 1
+            self.busy_time += t
+
+            # ---- apply effects ---------------------------------------
+            for req, chunk, _ctx in plan.prefill:
+                req.prefill_done_len = max(req.cached_len,
+                                           req.prefill_done_len) + chunk
+                if req.remaining_prefill == 0:
+                    self.hooks.fire("after_prefill", self, req)
+                    self._emit_token(req, now)
+            for req in plan.decode:
+                self._emit_token(req, now)
+
+            self.mem_timeline.append(MemSample(
+                now, self.mem.num_used, self.mem.used_bytes(),
+                len(self.running)))
+            self.hooks.fire("after_iteration", self, plan, t)
+
+    # ------------------------------------------------------------------
+    def _emit_token(self, req: Request, now: float) -> None:
+        first = req.tokens_generated == 0
+        req.tokens_generated += 1
+        req.token_times.append(now)
+        if first:
+            req.t_first_token = now
+            self.hooks.fire("on_first_token", self, req)
+            if req.state == State.MIGRATING:
+                return                      # handed off to a decode worker
+        req.state = State.DECODE
+        self.hooks.fire("after_token", self, req)
+        if req.finished:
+            self._finish(req, now)
+
+    def _finish(self, req: Request, now: float) -> None:
+        req.state = State.FINISHED
+        req.t_finish = now
+        if req in self.running:
+            self.running.remove(req)
+        self.mem.free(req)
+        if self.pool is not None:
+            self.pool.store(req.session_id, req.context_len)
+        self.hooks.fire("on_finish", self, req)
+        if self.cluster is not None:
+            self.cluster.on_request_finished(req)
+
+    # ------------------------------------------------------------------
+    def release(self, req: Request) -> None:
+        """Remove a request from this worker (migration/failure)."""
+        if req in self.running:
+            self.running.remove(req)
+        if req in self.waiting:
+            self.waiting.remove(req)
+        self.mem.free(req)
+
+    def fail(self) -> List[Request]:
+        """Kill the worker; returns requests needing re-dispatch."""
+        self.alive = False
+        orphans = list(self.running) + list(self.waiting)
+        for r in orphans:
+            self.mem.free(r)
+            # restart from scratch (KV lost)
+            r.prefill_done_len = 0
+            r.cached_len = 0
+            r.preempt_count += 1
+            r.state = State.QUEUED
+        self.running.clear()
+        self.waiting.clear()
+        return orphans
+
+    def recover(self) -> None:
+        self.alive = True
+        self._wakeup()

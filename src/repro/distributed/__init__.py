@@ -1,0 +1,1 @@
+from repro.distributed.padding import PadPlan, make_pad_plan  # noqa: F401

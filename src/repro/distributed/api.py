@@ -1,0 +1,95 @@
+"""Logical-axis sharding API.
+
+Models never mention mesh axes; they annotate activations with *logical*
+axis names via ``shard(x, "batch", "seq", "heads", None)``.  A rule set
+(installed with ``use_rules``) maps logical names to mesh axes; with no
+rules installed every call is a no-op, so CPU unit tests never touch the
+mesh machinery.
+
+This indirection is the §Perf lever: hillclimb iterations swap rule sets
+(e.g. move "kv_seq" from None to "data" to enable sequence parallelism for
+``long_500k``) without touching model code.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    """Mapping from logical axis name -> mesh axis (or tuple, or None)."""
+
+    rules: Tuple[Tuple[str, MeshAxes], ...]
+
+    def get(self, name: Optional[str]) -> MeshAxes:
+        if name is None:
+            return None
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return None
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*(self.get(a) for a in logical))
+
+
+def make_rules(**kw: MeshAxes) -> AxisRules:
+    return AxisRules(tuple(sorted(kw.items())))
+
+
+#: Default logical-axis vocabulary (see shard_plan.py for parameter rules):
+#:   batch     — request/example axis            -> data (+pod)
+#:   seq       — sequence axis of activations    -> None (SP: "data")
+#:   kv_seq    — KV-cache sequence axis          -> None (SP for long ctx)
+#:   heads     — q heads                         -> model
+#:   kv_heads  — kv heads (physical, replicated) -> model
+#:   ff        — MLP hidden                      -> model
+#:   vocab     — vocabulary                      -> model
+#:   experts   — MoE expert axis                 -> model (EP)
+#:   embed     — d_model of activations          -> None
+DEFAULT_LOGICAL = ("batch", "seq", "kv_seq", "heads", "kv_heads", "ff",
+                   "vocab", "experts", "embed")
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[AxisRules] = None
+
+
+_STATE = _State()
+
+
+@contextmanager
+def use_rules(mesh: Mesh, rules: AxisRules):
+    prev = (_STATE.mesh, _STATE.rules)
+    _STATE.mesh, _STATE.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.rules = prev
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _STATE.rules
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _STATE.mesh
+
+
+def shard(x, *logical: Optional[str]):
+    """Constrain activation sharding by logical axis names (no-op w/o rules)."""
+    if _STATE.mesh is None or _STATE.rules is None:
+        return x
+    spec = _STATE.rules.spec(*logical)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_STATE.mesh, spec))

@@ -1,0 +1,137 @@
+"""Flash attention forward — Pallas TPU kernel.
+
+TPU-native tiling (not a CUDA port):
+
+* Grid ``(B, Hq, NQ, NK)``; the KV axis is the innermost (sequential)
+  dimension so the online-softmax state lives in VMEM scratch across the
+  KV sweep for one (batch, head, q-block) and output is written exactly
+  once, on the final KV step.
+* BlockSpecs DMA one ``(block_q, head_dim)`` Q tile and one
+  ``(block_kv, head_dim)`` K/V tile from HBM into VMEM per step; the MXU
+  sees (block_q × head_dim) @ (head_dim × block_kv) matmuls with both
+  dims padded to the 128-lane register layout by the caller (ops.py).
+* GQA is expressed in the K/V index maps (q head h reads kv head
+  ``h // group``) — no repeated KV materialization in HBM.
+* Causal masking: whole KV tiles strictly above the diagonal are skipped
+  with ``pl.when`` (no FLOPs; Mosaic elides the unused DMA); the diagonal
+  tile is masked element-wise.
+
+Validated in interpret mode against ``ref.py`` (pure jnp).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                      causal: bool, block_q: int, block_kv: int,
+                      num_kv_blocks: int, softcap: float, kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        d = q.shape[-1]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (d ** -0.5)                               # (bq, bk)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_kv), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_kv), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        elif kv_len < num_kv_blocks * block_kv:
+            # non-causal with padded KV tail: mask the padding
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_kv), 1)
+            s = jnp.where(kpos < kv_len, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                              # (bq,)
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[:, 0] = m_new
+        l_ref[:, 0] = l_new
+
+    if causal:
+        # Skip KV tiles strictly above the diagonal.
+        pl.when(k_start <= q_start + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        o_ref[0, 0, :, :] = (acc_ref[...] /
+                             jnp.maximum(l, 1e-30)[:, None]
+                             ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool, block_q: int = 512,
+                        block_kv: int = 512, softcap: float = 0.0,
+                        kv_len: int = 0, interpret: bool = False):
+    """q: (B,H,Sq,D); k/v: (B,Hkv,Skv,D). Head-major layout (caller
+    transposes) so each BlockSpec tile is a contiguous (seq, head_dim)
+    plane. Shapes must tile exactly (ops.py pads; ``kv_len`` is the
+    unpadded KV length for non-causal masking)."""
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = h // hkv
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv)
+    nq, nk = sq // block_q, skv // block_kv
+    grid = (b, h, nq, nk)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, causal=causal, block_q=block_q,
+        block_kv=block_kv, num_kv_blocks=nk, softcap=softcap,
+        kv_len=kv_len or skv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h_, qi, ki: (b_, h_ // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h_, qi, ki: (b_, h_ // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,1 @@
+from repro.kernels.paged_attention import ops, ref  # noqa: F401

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens):
+    """Same signature/layout as the kernel:
+    q (B,Hq,D); k/v_pages (Hkv,NP,P,D); block_tables (B,MP); lens (B,).
+    Gathers each sequence's pages into a contiguous cache, then does
+    masked softmax attention."""
+    b, hq, d = q.shape
+    hkv, _, page, _ = k_pages.shape
+    mp = block_tables.shape[1]
+    group = hq // hkv
+
+    # gather: (B, Hkv, MP*P, D)
+    k_seq = jnp.moveaxis(k_pages[:, block_tables], 0, 1) \
+        .reshape(b, hkv, mp * page, d)
+    v_seq = jnp.moveaxis(v_pages[:, block_tables], 0, 1) \
+        .reshape(b, hkv, mp * page, d)
+    k_seq = jnp.repeat(k_seq, group, axis=1)
+    v_seq = jnp.repeat(v_seq, group, axis=1)
+
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                   k_seq.astype(jnp.float32)) * (d ** -0.5)
+    valid = jnp.arange(mp * page)[None, None, :] < \
+        context_lens[:, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhk,bhkd->bhd", p, v_seq.astype(jnp.float32))
+    return o.astype(q.dtype)

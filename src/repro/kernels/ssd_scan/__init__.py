@@ -1,0 +1,1 @@
+from repro.kernels.ssd_scan import ops, ref  # noqa: F401

@@ -1,0 +1,114 @@
+"""Chunked SSD (Mamba2) scan — Pallas TPU kernel.
+
+The SSD duality makes the within-chunk work two (L×L)·(L×P) matmuls —
+exactly what the MXU wants — while the cross-chunk recurrence is a tiny
+(N×P) state update carried in VMEM scratch:
+
+* Grid ``(B, H, NC)``, chunk axis innermost/sequential; the fp32 state
+  ``(N, P)`` persists in VMEM scratch across the chunk sweep of one
+  (batch, head) — the HBM traffic is exactly one read of x/B/C/dt and one
+  write of y (plus the final state), i.e. the kernel is I/O-minimal.
+* B/C are grouped (GVA): the index map sends head h to group
+  ``h // (H/G)`` — no repeated B/C in HBM.
+* Block shapes: L=chunk_size (default 256) rows × P/N lanes; with
+  P=64, N=128, L=256 the working set is ~0.6 MB fp32 — far under VMEM,
+  leaving room for Mosaic's double buffering.
+
+Validated in interpret mode against ``ref.py`` (recurrent oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, da_ref, b_ref, c_ref, y_ref, fs_ref, state_ref, *,
+                num_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (L, P)
+    la = da_ref[0, :, 0].astype(jnp.float32)           # (L,)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)         # (L, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)         # (L, N)
+    L = x.shape[0]
+
+    seg = jnp.cumsum(la)                               # (L,)  includes self
+    total = seg[-1]
+
+    # ---- within-chunk: (scores ⊙ decay) @ x ---------------------------
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    li = seg[:, None]
+    lj = seg[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(tri, jnp.exp(li - lj), 0.0)
+    y = jax.lax.dot_general(scores * decay, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk: y += exp(seg) * C @ state_in --------------------
+    state_in = state_ref[...]                          # (N, P)
+    y = y + jnp.exp(seg)[:, None] * jax.lax.dot_general(
+        Cm, state_in, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # ---- state update: S = S*exp(total) + (w*B)^T @ x -----------------
+    w = jnp.exp(total - seg)                           # (L,)
+    state_ref[...] = state_in * jnp.exp(total) + jax.lax.dot_general(
+        Bm * w[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == num_chunks - 1)
+    def _finish():
+        fs_ref[0, 0] = state_ref[...]
+
+
+def ssd_scan_fwd(xbar, dA_log, Bm, Cm, *, chunk: int,
+                 interpret: bool = False):
+    """xbar: (B,S,H,P) fp32 dt-scaled inputs; dA_log: (B,S,H);
+    Bm/Cm: (B,S,G,N).  Returns (y (B,S,H,P) f32, final_state (B,H,N,P) f32).
+    S must be a multiple of ``chunk`` (ops.py pads)."""
+    b, s, h, p = xbar.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    hpg = h // g
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    grid = (b, h, nc)
+
+    kernel = functools.partial(_ssd_kernel, num_chunks=nc)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, chunk, 1),
+                         lambda b_, h_, ci: (b_, ci, h_)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda b_, h_, ci: (b_, ci, h_ // hpg, 0)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda b_, h_, ci: (b_, ci, h_ // hpg, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, 1, n, p),
+                         lambda b_, h_, ci: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xbar, dA_log, Bm, Cm)

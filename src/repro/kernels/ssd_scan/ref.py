@@ -1,0 +1,9 @@
+"""Oracle for the SSD scan kernel: the token-by-token recurrence."""
+from __future__ import annotations
+
+from repro.models.ssm import ssd_recurrent
+
+
+def ssd_scan_ref(xbar, dA_log, Bm, Cm):
+    """Same contract as the kernel; returns (y, final_state) in fp32."""
+    return ssd_recurrent(xbar, dA_log, Bm, Cm)

@@ -1,0 +1,74 @@
+"""Serving CLI: run the real paged-KV engine on a workload.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --smoke \
+      --requests 50 --qps 0 --max-batch 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.metrics import Results
+from repro.core.workload import WorkloadSpec, generate
+from repro.models import model_zoo as zoo
+from repro.serving.engine import EngineConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=50)
+    ap.add_argument("--qps", type=float, default=0.0)
+    ap.add_argument("--prompt-len", type=int, default=0,
+                    help=">0 fixes the prompt length")
+    ap.add_argument("--output-len", type=int, default=0)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--num-blocks", type=int, default=512)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--attn", default="gather", choices=("gather", "pallas"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = zoo.build(cfg)
+    params = zoo.init_params(model, jax.random.key(args.seed))
+
+    wl = WorkloadSpec(num_requests=args.requests, qps=args.qps,
+                      seed=args.seed)
+    if args.prompt_len:
+        wl = WorkloadSpec(num_requests=args.requests, qps=args.qps,
+                          seed=args.seed, lengths="fixed",
+                          prompt_len=args.prompt_len,
+                          output_len=args.output_len or 16)
+    else:
+        wl = WorkloadSpec(num_requests=args.requests, qps=args.qps,
+                          seed=args.seed, max_prompt_len=96,
+                          max_output_len=32)
+    reqs = generate(wl)
+    mp = args.num_blocks // max(4, args.max_batch)
+    ec = EngineConfig(num_blocks=args.num_blocks, block_size=args.block_size,
+                      max_batch=args.max_batch,
+                      max_pages_per_seq=mp, attn_path=args.attn,
+                      seed=args.seed)
+    eng = ServingEngine(model, params, ec)
+    for r in reqs:
+        r.arrival_time = 0.0
+        eng.add_request(r)
+    eng.run()
+    res = Results(requests=reqs, sim_time=eng.clock)
+    summary = res.summary()
+    summary["iterations"] = len(eng.records)
+    print(json.dumps(summary, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(summary, f)
+
+
+if __name__ == "__main__":
+    main()

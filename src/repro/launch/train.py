@@ -1,0 +1,66 @@
+"""Training CLI.
+
+Examples:
+  # smoke-size 2-layer qwen3 on CPU
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --smoke \
+      --steps 50 --seq-len 64 --batch 8
+  # ~100M-param model for a few hundred steps (examples/train_100m.py)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import model_zoo as zoo
+from repro.models.common import RunSettings
+from repro.training.data import DataConfig
+from repro.training.optimizer import AdamWConfig
+from repro.training.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--remat", default="full",
+                    choices=("none", "full", "dots_saveable"))
+    ap.add_argument("--history-out", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    settings = RunSettings(remat=args.remat)
+    model = zoo.build(cfg, settings=settings)
+    tc = TrainConfig(
+        opt=AdamWConfig(lr=args.lr, warmup_steps=max(10, args.steps // 20),
+                        total_steps=args.steps),
+        microbatches=args.microbatches,
+        grad_compression=args.grad_compression,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                    global_batch=args.batch, seed=args.seed)
+    trainer = Trainer(model, tc, dc, init_key=jax.random.key(args.seed))
+    print(f"arch={cfg.name} params={zoo.param_count(trainer.params):,} "
+          f"steps={args.steps}")
+    trainer.run(args.steps)
+    if args.history_out:
+        with open(args.history_out, "w") as f:
+            json.dump(trainer.history, f)
+    print("final:", trainer.history[-1])
+
+
+if __name__ == "__main__":
+    main()

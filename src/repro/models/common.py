@@ -1,0 +1,43 @@
+"""Shared model-runtime settings and small utilities."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class RunSettings:
+    """Hashable knobs threaded through model apply fns (static under jit).
+
+    These are the levers the §Perf hillclimb moves.
+    """
+
+    attn_impl: str = "auto"        # auto | naive | blocked | blocked_causal | pallas
+    attn_block_q: int = 1024
+    attn_block_kv: int = 1024
+    naive_attn_max_seq: int = 2048  # "auto" switches to blocked above this
+    remat: str = "full"            # none | full | dots_saveable
+    scan_layers: bool = True
+    moe_impl: str = "dense_onehot"  # dense_onehot | sort (dropless)
+    logits_fp32: bool = True
+    # --- sharding-plan knobs (read by distributed.shard_plan) ----------
+    embed_shard: str = "vocab"     # vocab (Megatron vocab-parallel) | fsdp
+    fsdp_params: bool = True       # False: replicate non-embedding weights
+    #                                over "data" (pure TP+DP, no ZeRO-3)
+
+    def resolve_attn(self, seq_len: int) -> str:
+        if self.attn_impl != "auto":
+            return self.attn_impl
+        return "naive" if seq_len <= self.naive_attn_max_seq else "blocked"
+
+
+DEFAULT_SETTINGS = RunSettings()
+
+
+def compute_dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def param_dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.param_dtype)

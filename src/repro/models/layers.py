@@ -1,0 +1,171 @@
+"""Building-block layers, written as pure functions over pytrees of params.
+
+No flax/haiku offline — a tiny functional convention instead:
+
+* ``init_*(key, ...) -> params`` returns a dict pytree.
+* ``apply`` functions take ``(params, x, ...)`` and are jit/pjit friendly.
+
+Parameters are stored in ``param_dtype`` (fp32 master) and cast to the
+compute dtype at use (bf16 on TPU), the standard mixed-precision recipe.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def _normal(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, *, bias=False, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": _normal(key, (d_in, d_out), dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p, x, compute_dtype=None):
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def norm_init(d, kind, dtype):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p, x, kind, eps=1e-5):
+    """RMSNorm / LayerNorm in fp32, output in x.dtype."""
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(kind)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def head_norm_apply(p, x, eps=1e-6):
+    """Per-head RMSNorm over head_dim (qk-norm). x: (..., H, D)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) or (S,). Pair layout: [0::2],[1::2]
+    interleaved halves (GPT-NeoX style split-half, matching most HF ports)."""
+    b, s, h, d = x.shape
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, d_model: int):
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * dim / d_model)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model, d_ff, act, dtype, *, bias=False):
+    ks = jax.random.split(key, 3)
+    if act == "silu":  # SwiGLU
+        return {"gate": dense_init(ks[0], d_model, d_ff, dtype, bias=bias),
+                "up": dense_init(ks[1], d_model, d_ff, dtype, bias=bias),
+                "down": dense_init(ks[2], d_ff, d_model, dtype, bias=bias,
+                                    scale=d_ff ** -0.5)}
+    return {"up": dense_init(ks[0], d_model, d_ff, dtype, bias=bias),
+            "down": dense_init(ks[1], d_ff, d_model, dtype, bias=bias,
+                                scale=d_ff ** -0.5)}
+
+
+def mlp_apply(p, x, act, compute_dtype):
+    if "gate" in p:
+        g = dense_apply(p["gate"], x, compute_dtype)
+        u = dense_apply(p["up"], x, compute_dtype)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(g.dtype) * u
+    else:
+        u = dense_apply(p["up"], x, compute_dtype)
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(u.dtype)
+    return dense_apply(p["down"], h, compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def embed_init(key, vocab, d_model, dtype):
+    return {"table": _normal(key, (vocab, d_model), dtype, 0.02 * math.sqrt(d_model) / math.sqrt(d_model))}
+
+
+def embed_apply(p, ids, compute_dtype):
+    return p["table"].astype(compute_dtype)[ids]
+
+
+def unembed_apply(table, x, *, vocab_logical: int, fp32: bool = True):
+    """x @ table.T with padded-vocab masking. table: (Vp, D)."""
+    dt = jnp.float32 if fp32 else x.dtype
+    logits = jnp.einsum("...d,vd->...v", x.astype(dt), table.astype(dt))
+    vp = table.shape[0]
+    if vp != vocab_logical:
+        neg = jnp.full((vp - vocab_logical,), -1e30, dt)
+        logits = logits.at[..., vocab_logical:].set(neg)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def softmax_xent(logits, labels, mask=None):
+    """Mean token cross-entropy. logits fp32 (..., V); labels int (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

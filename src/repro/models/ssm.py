@@ -1,0 +1,305 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Pure-functional, three entry points that agree numerically (tests):
+
+* ``ssd_chunked``   — chunked "attention-like" scan used for train/prefill.
+                      Quadratic only within a chunk; linear across chunks.
+* ``ssd_recurrent`` — token-by-token reference recurrence (oracle; slow).
+* ``ssd_step``      — O(1) single-token decode state update.
+
+The block (``mamba2_init/apply/decode``) follows the Mamba2 layout:
+``in_proj -> [z | xBC | dt]``, causal depthwise conv over xBC, SSD core,
+D skip, gated RMSNorm, ``out_proj``. B/C are grouped (``n_groups``); heads
+within a group share B/C (the multi-value-attention analogue).
+
+Padded SSD heads (pad plan) are masked at out_proj: their ``A_log`` rows
+still exist but the output projection columns for padded heads are zeroed
+by the mask, so they contribute nothing and receive zero gradient signal
+through the output path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _normal, norm_apply
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+def ssd_recurrent(xbar, dA_log, Bm, Cm, state0=None):
+    """Token-by-token oracle.  xbar: (B,S,H,P) dt-scaled inputs;
+    dA_log: (B,S,H) = dt*A (<=0);  Bm/Cm: (B,S,G,N), heads grouped
+    contiguously (head h uses group h // (H//G)).
+
+    Returns (y (B,S,H,P) fp32, final_state (B,H,N,P) fp32).
+    """
+    b, s, h, p = xbar.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    hpg = h // g
+    Bh = jnp.repeat(Bm, hpg, axis=2).astype(jnp.float32)     # (B,S,H,N)
+    Ch = jnp.repeat(Cm, hpg, axis=2).astype(jnp.float32)
+    xf = xbar.astype(jnp.float32)
+    da = jnp.exp(dA_log.astype(jnp.float32))                 # (B,S,H)
+
+    def step(state, inp):
+        x_t, b_t, c_t, a_t = inp                             # (B,H,P),(B,H,N)...
+        state = state * a_t[..., None, None] + \
+            b_t[..., :, None] * x_t[..., None, :]            # (B,H,N,P)
+        y_t = jnp.einsum("bhn,bhnp->bhp", c_t, state)
+        return state, y_t
+
+    state0 = jnp.zeros((b, h, n, p), jnp.float32) if state0 is None \
+        else state0.astype(jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(Bh, 1, 0),
+          jnp.moveaxis(Ch, 1, 0), jnp.moveaxis(da, 1, 0))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1), state                     # (B,S,H,P)
+
+
+def ssd_chunked(xbar, dA_log, Bm, Cm, chunk: int, state0=None):
+    """Chunked SSD scan (the Mamba2 'SSD' algorithm).
+
+    Same signature/semantics as ``ssd_recurrent`` but O(S·L) memory and
+    matmul-dominated (MXU-friendly): within-chunk attention-like term +
+    lax.scan over per-chunk states.
+    """
+    b, s, h, p = xbar.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by chunk {chunk}")
+    nc, L = s // chunk, chunk
+    hpg = h // g
+
+    xf = xbar.astype(jnp.float32).reshape(b, nc, L, h, p)
+    la = dA_log.astype(jnp.float32).reshape(b, nc, L, h)     # log a_t
+    Bc = Bm.astype(jnp.float32).reshape(b, nc, L, g, n)
+    Cc = Cm.astype(jnp.float32).reshape(b, nc, L, g, n)
+
+    seg = jnp.cumsum(la, axis=2)                             # L_i, incl. self
+    total = seg[:, :, -1, :]                                 # (B,nc,H)
+
+    # ---- within-chunk (quadratic in L) --------------------------------
+    # scores_ij = C_i . B_j per group -> (B,nc,G,L,L)
+    scores = jnp.einsum("bclgn,bcmgn->bcglm", Cc, Bc)
+    # decay_ij = exp(L_i - L_j) for i>=j else 0 -> (B,nc,H,L,L)
+    li = seg[:, :, :, None, :]                               # (B,nc,L,1,H)
+    lj = seg[:, :, None, :, :]                               # (B,nc,1,L,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.exp(jnp.where(mask[None, None, :, :, None], li - lj, -jnp.inf))
+    decay = jnp.moveaxis(decay, -1, 2)                       # (B,nc,H,L,L)
+    scores_h = jnp.repeat(scores, hpg, axis=2) * decay       # (B,nc,H,L,L)
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", scores_h, xf)
+
+    # ---- per-chunk state contribution ---------------------------------
+    # S_c = sum_j exp(total - L_j) B_j (x)  xbar_j^T  -> (B,nc,H,N,P)
+    w = jnp.exp(total[:, :, None, :] - seg)                  # (B,nc,L,H)
+    Bh = jnp.repeat(Bc, hpg, axis=3)                         # (B,nc,L,H,N)
+    chunk_states = jnp.einsum("bclh,bclhn,bclhp->bchnp", w, Bh, xf)
+
+    # ---- inter-chunk recurrence ----------------------------------------
+    def step(state, inp):
+        cs, tot = inp                                        # (B,H,N,P),(B,H)
+        out_state = state                                    # state BEFORE chunk
+        state = state * jnp.exp(tot)[..., None, None] + cs
+        return state, out_state
+
+    state0 = jnp.zeros((b, h, n, p), jnp.float32) if state0 is None \
+        else state0.astype(jnp.float32)
+    final_state, states_in = jax.lax.scan(
+        step, state0, (jnp.moveaxis(chunk_states, 1, 0),
+                       jnp.moveaxis(total, 1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)                # (B,nc,H,N,P)
+
+    # y_inter_i = exp(L_i) C_i . S_in
+    Ch = jnp.repeat(Cc, hpg, axis=3)                         # (B,nc,L,H,N)
+    y_inter = jnp.einsum("bclh,bclhn,bchnp->bclhp",
+                         jnp.exp(seg), Ch, states_in)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final_state
+
+
+def ssd_step(state, x_t, dA_log_t, B_t, C_t):
+    """One decode step.  state: (B,H,N,P) fp32; x_t: (B,H,P) dt-scaled;
+    dA_log_t: (B,H); B_t/C_t: (B,G,N).  Returns (y (B,H,P), state)."""
+    h = x_t.shape[1]
+    g = B_t.shape[1]
+    hpg = h // g
+    Bh = jnp.repeat(B_t, hpg, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C_t, hpg, axis=1).astype(jnp.float32)
+    a = jnp.exp(dA_log_t.astype(jnp.float32))
+    state = state * a[..., None, None] + \
+        Bh[..., :, None] * x_t.astype(jnp.float32)[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d
+# ---------------------------------------------------------------------------
+def causal_conv1d(x, w, b, state=None):
+    """x: (B,S,C); w: (W,C); b: (C,).  Left-pads with `state`
+    ((B,W-1,C), zeros if None).  Returns (y (B,S,C), new_state)."""
+    bsz, s, c = x.shape
+    wwin = w.shape[0]
+    if state is None:
+        state = jnp.zeros((bsz, wwin - 1, c), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    # depthwise conv as sum of shifted scaled copies (W is tiny: 4)
+    y = jnp.zeros((bsz, s, c), jnp.float32)
+    for i in range(wwin):
+        y = y + xp[:, i:i + s, :].astype(jnp.float32) * \
+            w[i][None, None, :].astype(jnp.float32)
+    y = y + b[None, None, :].astype(jnp.float32)
+    new_state = xp[:, s:, :]
+    return y.astype(x.dtype), new_state
+
+
+def conv_step(x_t, w, b, state):
+    """One-token conv.  x_t: (B,C); state: (B,W-1,C)."""
+    xp = jnp.concatenate([state, x_t[:, None, :]], axis=1)   # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", xp.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return y.astype(x_t.dtype), xp[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+def mamba2_init(key, d_model: int, ssm, dtype, n_heads_phys: int = 0):
+    """ssm: SSMConfig.  ``n_heads_phys`` >= logical heads (pad plan)."""
+    d_in = ssm.d_inner(d_model)
+    h_log = ssm.n_heads(d_model)
+    h = n_heads_phys or h_log
+    p = ssm.head_dim
+    d_in_phys = h * p
+    g, n = ssm.n_groups, ssm.d_state
+    conv_dim = d_in_phys + 2 * g * n
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_in_phys + 2 * g * n + h                   # z|xBC|dt
+    params = {
+        "in_proj": _normal(ks[0], (d_model, d_proj), dtype, d_model ** -0.5),
+        "conv_w": _normal(ks[1], (ssm.conv_width, conv_dim), dtype,
+                          conv_dim ** -0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        # A in [-1, -e] roughly: A_log ~ log(Uniform[1,16])
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),
+        "D": jnp.ones((h,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (h,),
+                                       minval=math.log(1e-3),
+                                       maxval=math.log(1e-1))))).astype(dtype),
+        "norm_scale": jnp.ones((d_in_phys,), dtype),
+        "out_proj": _normal(ks[3], (d_in_phys, d_model), dtype,
+                            d_in_phys ** -0.5),
+    }
+    return params
+
+
+def _mamba2_pre(p, x, ssm, h, compute_dtype):
+    """Shared pre-SSD computation. x: (B,S,d_model) ->
+    (z, xBC_raw, dt_raw) in compute dtype."""
+    proj = x.astype(compute_dtype) @ p["in_proj"].astype(compute_dtype)
+    pdim = ssm.head_dim
+    d_in = h * pdim
+    g, n = ssm.n_groups, ssm.d_state
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in:d_in + d_in + 2 * g * n]
+    dt_raw = proj[..., -h:]
+    return z, xBC, dt_raw
+
+
+def _mamba2_post(p, y, z, x_conv, compute_dtype, head_mask=None):
+    """D-skip + gated norm + out_proj.  y,x_conv: (B,S,H,P) fp32/compute."""
+    b, s, h, pd = y.shape
+    D = p["D"].astype(jnp.float32)
+    y = y + D[None, None, :, None] * x_conv.astype(jnp.float32)
+    if head_mask is not None:
+        y = y * head_mask[None, None, :, None]
+    y = y.reshape(b, s, h * pd)
+    zf = jax.nn.silu(z.astype(jnp.float32))
+    y = y * zf
+    # gated RMSNorm
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * \
+        p["norm_scale"].astype(jnp.float32)[None, None, :]
+    y = y.astype(compute_dtype)
+    return y @ p["out_proj"].astype(compute_dtype)
+
+
+def _split_xbc(xBC, h, pdim, g, n):
+    x = xBC[..., : h * pdim]
+    Bm = xBC[..., h * pdim: h * pdim + g * n]
+    Cm = xBC[..., h * pdim + g * n:]
+    return x, Bm, Cm
+
+
+def mamba2_apply(p, x, ssm, *, compute_dtype, conv_state=None, ssd_state=None,
+                 head_mask=None, impl: str = "chunked", chunk: int = 0):
+    """Full-sequence Mamba2 block.  x: (B,S,d_model).
+
+    Returns (out (B,S,d_model), (conv_state, ssd_state)) so prefill can
+    seed decode.
+    """
+    b, s, _ = x.shape
+    h = p["A_log"].shape[0]
+    pdim = ssm.head_dim
+    g, n = ssm.n_groups, ssm.d_state
+    chunk = chunk or ssm.chunk_size
+
+    z, xBC, dt_raw = _mamba2_pre(p, x, ssm, h, compute_dtype)
+    xBC, conv_state = causal_conv1d(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(compute_dtype)
+    xc, Bm, Cm = _split_xbc(xBC, h, pdim, g, n)
+    xc = xc.reshape(b, s, h, pdim)
+    Bm = Bm.reshape(b, s, g, n)
+    Cm = Cm.reshape(b, s, g, n)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (H,)
+    dA_log = dt * A[None, None, :]
+    xbar = xc.astype(jnp.float32) * dt[..., None]
+
+    if impl == "chunked" and s % chunk == 0 and s > 1:
+        y, ssd_state = ssd_chunked(xbar, dA_log, Bm, Cm, chunk, ssd_state)
+    else:
+        y, ssd_state = ssd_recurrent(xbar, dA_log, Bm, Cm, ssd_state)
+
+    out = _mamba2_post(p, y, z, xc, compute_dtype, head_mask)
+    return out, (conv_state, ssd_state)
+
+
+def mamba2_decode(p, x_t, ssm, *, compute_dtype, conv_state, ssd_state,
+                  head_mask=None):
+    """One-token decode.  x_t: (B,d_model); states from prefill.
+
+    Returns (out (B,d_model), (conv_state, ssd_state))."""
+    bsz = x_t.shape[0]
+    h = p["A_log"].shape[0]
+    pdim = ssm.head_dim
+    g, n = ssm.n_groups, ssm.d_state
+
+    z, xBC, dt_raw = _mamba2_pre(p, x_t[:, None, :], ssm, h, compute_dtype)
+    z, xBC, dt_raw = z[:, 0], xBC[:, 0], dt_raw[:, 0]
+    xBC, conv_state = conv_step(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(compute_dtype)
+    xc, Bm, Cm = _split_xbc(xBC, h, pdim, g, n)
+    xc = xc.reshape(bsz, h, pdim)
+    Bm = Bm.reshape(bsz, g, n)
+    Cm = Cm.reshape(bsz, g, n)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))   # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA_log = dt * A[None, :]
+    xbar = xc.astype(jnp.float32) * dt[..., None]
+
+    y, ssd_state = ssd_step(ssd_state, xbar, dA_log, Bm, Cm)
+    out = _mamba2_post(p, y[:, None], z[:, None], xc[:, None],
+                       compute_dtype, head_mask)
+    return out[:, 0], (conv_state, ssd_state)

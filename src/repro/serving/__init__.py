@@ -1,0 +1,1 @@
+from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401

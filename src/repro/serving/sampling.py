@@ -1,0 +1,21 @@
+"""Token sampling (greedy / temperature), padded-vocab aware."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("greedy", "vocab_logical"))
+def sample_token(logits, key, *, greedy: bool = True,
+                 temperature: float = 1.0, vocab_logical: int = 0):
+    """logits: (V_phys,). Returns an int32 token id < vocab_logical."""
+    logits = logits.astype(jnp.float32)
+    if vocab_logical and vocab_logical < logits.shape[-1]:
+        mask = jnp.arange(logits.shape[-1]) >= vocab_logical
+        logits = jnp.where(mask, -1e30, logits)
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / jnp.maximum(temperature, 1e-6)).astype(jnp.int32)

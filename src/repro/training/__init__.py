@@ -1,0 +1,2 @@
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.training.trainer import TrainConfig, Trainer  # noqa: F401

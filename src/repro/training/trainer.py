@@ -1,0 +1,148 @@
+"""Training loop: microbatched, shardable, checkpointed, restartable.
+
+The ``train_step`` here is the exact function the multi-pod dry-run
+lowers for the ``train_4k`` shapes: loss (+MoE aux) -> grad -> optional
+int8 error-feedback compression -> AdamW.  Microbatching (gradient
+accumulation) runs as a ``lax.scan`` over microbatches so remat keeps
+activation memory flat.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model_zoo as zoo
+from repro.training import grad_compress
+from repro.training.checkpoint import CheckpointManager
+from repro.training.data import DataConfig, DataPipeline
+from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                      global_norm)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    grad_compression: bool = False
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 100
+    async_checkpoint: bool = True
+    log_every: int = 10
+
+
+def make_train_step(model: zoo.Model, tc: TrainConfig):
+    """Returns jit-able ``train_step(params, opt_state, ef_state, batch)``.
+
+    batch: {"tokens": (B,S), "labels": (B,S)} with B divisible by
+    ``tc.microbatches``.
+    """
+
+    def loss_fn(params, batch):
+        return zoo.loss_fn(model, params, batch)
+
+    def train_step(params, opt_state, ef_state, batch):
+        nmb = tc.microbatches
+        if nmb > 1:
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape((nmb, b // nmb) + x.shape[1:])
+            mbatches = jax.tree.map(reshape, batch)
+
+            def mb_body(acc, mb):
+                (l, m), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree.map(jnp.add, acc,
+                                   jax.tree.map(
+                                       lambda x: x.astype(jnp.float32), g))
+                return acc, l
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, losses = jax.lax.scan(mb_body, zero, mbatches)
+            grads = jax.tree.map(lambda x: x / nmb, gsum)
+            loss = losses.mean()
+        else:
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        if tc.grad_compression:
+            grads, ef_state = grad_compress.compress_grads(grads, ef_state)
+        params, opt_state, om = adamw_update(tc.opt, grads, opt_state,
+                                             params)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, ef_state, metrics
+
+    return train_step
+
+
+class Trainer:
+    def __init__(self, model: zoo.Model, tc: TrainConfig, dc: DataConfig,
+                 *, init_key=None, shardings=None):
+        self.model = model
+        self.tc = tc
+        self.data = DataPipeline(dc)
+        key = init_key if init_key is not None else jax.random.key(0)
+        self.params = zoo.init_params(model, key)
+        self.opt_state = adamw_init(self.params)
+        self.ef_state = grad_compress.ef_init(self.params) \
+            if tc.grad_compression else {"_": jnp.zeros(())}
+        self.step = 0
+        self.ckpt = CheckpointManager(tc.checkpoint_dir) \
+            if tc.checkpoint_dir else None
+        self._fn = jax.jit(make_train_step(model, tc))
+        self.history: list = []
+        if self.ckpt is not None:
+            self._maybe_restore(shardings)
+
+    # -- fault tolerance -------------------------------------------------
+    def _state_tree(self):
+        return {"params": self.params, "opt": self.opt_state,
+                "ef": self.ef_state}
+
+    def _maybe_restore(self, shardings=None) -> bool:
+        step, tree, extra = self.ckpt.restore_latest(
+            self._state_tree(), shardings=shardings)
+        if step is None:
+            return False
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.ef_state = tree["ef"]
+        self.step = step
+        if "data" in extra:
+            self.data.restore(extra["data"])
+        return True
+
+    def save(self, blocking: bool = True) -> None:
+        if self.ckpt is None:
+            return
+        self.ckpt.save(self.step, self._state_tree(),
+                       blocking=blocking or not self.tc.async_checkpoint,
+                       extra={"data": self.data.state()})
+
+    # -- loop --------------------------------------------------------------
+    def run(self, num_steps: int, *, log=print) -> Dict[str, float]:
+        last = {}
+        for _ in range(num_steps):
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.data.batch_at(self.data.cursor).items()}
+            self.data.cursor += 1
+            self.params, self.opt_state, self.ef_state, m = self._fn(
+                self.params, self.opt_state, self.ef_state, batch)
+            self.step += 1
+            last = {k: float(v) for k, v in m.items()}
+            self.history.append({"step": self.step, **last})
+            if log and self.step % self.tc.log_every == 0:
+                log(f"step {self.step}: " +
+                    " ".join(f"{k}={v:.4g}" for k, v in last.items()))
+            if self.ckpt is not None and \
+                    self.step % self.tc.checkpoint_every == 0:
+                self.save(blocking=not self.tc.async_checkpoint)
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return last

@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run subprocesses set
+# their own XLA_FLAGS; never set host-device-count globally here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

@@ -1,0 +1,117 @@
+"""Operator-graph cost model: physics sanity + paper's phase claims."""
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.core.costmodel.backends import RooflineBackend, TabularBackend
+from repro.core.costmodel.hardware import A100, G6_AIM, TPU_V5E, V100
+from repro.core.costmodel.operators import (BatchMix, OperatorGraph,
+                                            kv_bytes_per_token, param_bytes,
+                                            state_bytes_per_seq)
+
+
+def test_flops_close_to_6nd():
+    """Graph FLOPs for a decode-free prefill ~= 2*N*D fwd."""
+    cfg = get_config("llama2-7b")
+    g = OperatorGraph.from_config(cfg)
+    tokens = 2048
+    mix = BatchMix.from_batch([(tokens, 0)], [])
+    f, _ = g.totals(mix)
+    n = cfg.param_count() - cfg.vocab_size * cfg.d_model  # non-embed
+    lower, upper = 2 * n * tokens * 0.9, 2 * n * tokens * 1.35
+    assert lower < f < upper, (f, 2 * n * tokens)
+
+
+def test_prefill_compute_bound_decode_memory_bound():
+    """Paper background: prefill is compute-bound, decode memory-bound."""
+    cfg = get_config("llama2-7b")
+    g = OperatorGraph.from_config(cfg)
+    hw = A100
+    pre = BatchMix.from_batch([(1024, 0)], [])
+    dec = BatchMix.from_batch([], [1024] * 8)
+
+    def bound(mix):
+        comp = sum(op.flops(mix) for op in g.ops) / (hw.flops * hw.flops_eff)
+        memb = sum(op.bytes(mix) for op in g.ops) / (hw.mem_bw * hw.bw_eff)
+        return comp, memb
+
+    c_pre, m_pre = bound(pre)
+    c_dec, m_dec = bound(dec)
+    assert c_pre > m_pre, "prefill should be compute-bound"
+    assert m_dec > c_dec, "decode should be memory-bound"
+
+
+def test_decode_iteration_time_plausible():
+    """llama2-7b bs=8 decode on A100 ~ 15-60 ms/token-iteration."""
+    cfg = get_config("llama2-7b")
+    be = RooflineBackend.for_model(cfg, A100)
+    t = be.iteration_time(BatchMix.from_batch([], [512] * 8))
+    assert 5e-3 < t < 0.1, t
+
+
+def test_hardware_ordering_for_decode():
+    """Decode favors bandwidth: A100 > G6-AiM ~ > V100."""
+    cfg = get_config("llama2-7b")
+    mix = BatchMix.from_batch([], [1024] * 16)
+    times = {hw.name: RooflineBackend.for_model(cfg, hw).iteration_time(mix)
+             for hw in (A100, V100, G6_AIM)}
+    assert times["A100"] < times["V100"]
+    assert times["G6-AiM"] < times["V100"]
+
+
+def test_low_flops_a100_fine_for_decode_bad_for_prefill():
+    """Paper Fig. 12/15: computing matters for prefill, not decode."""
+    from repro.core.costmodel.hardware import A100_LOW
+    cfg = get_config("llama2-7b")
+    dec = BatchMix.from_batch([], [1024] * 16)
+    pre = BatchMix.from_batch([(2048, 0)], [])
+    t_dec = (RooflineBackend.for_model(cfg, A100_LOW).iteration_time(dec) /
+             RooflineBackend.for_model(cfg, A100).iteration_time(dec))
+    t_pre = (RooflineBackend.for_model(cfg, A100_LOW).iteration_time(pre) /
+             RooflineBackend.for_model(cfg, A100).iteration_time(pre))
+    assert t_dec < 1.5          # decode barely slower
+    assert t_pre > 2.0          # prefill much slower
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_graph_builds_for_every_arch(name):
+    cfg = get_config(name)
+    g = OperatorGraph.from_config(cfg, tp=16)
+    mix = BatchMix.from_batch([(256, 0)], [512] * 4,
+                              enc_tokens=cfg.enc_seq_len
+                              if cfg.family in ("audio", "encdec") else 0)
+    f, b = g.totals(mix)
+    assert f > 0 and b > 0
+
+
+def test_kv_sizing():
+    cfg = get_config("llama2-7b")
+    # 2 * 32 layers * 32 heads * 128 dim * 2 bytes = 524288 B/token
+    assert kv_bytes_per_token(cfg) == pytest.approx(524288)
+    assert state_bytes_per_seq(cfg) == 0
+    m = get_config("mamba2-130m")
+    assert kv_bytes_per_token(m) == 0
+    assert state_bytes_per_seq(m) > 0
+    assert param_bytes(cfg) == pytest.approx(cfg.param_count() * 2)
+
+
+def test_tabular_backend_fits_affine():
+    samples = []
+    for nt in (1, 8, 64, 256):
+        for kv in (0, 1000, 10000):
+            mix = BatchMix(new_tokens=nt, attn_units=kv * nt,
+                           kv_read_tokens=kv, n_seqs=max(1, nt // 4))
+            t = 1e-3 + 2e-6 * nt + 1e-9 * kv * nt + 3e-8 * kv
+            samples.append((mix, t))
+    be = TabularBackend.fit(samples)
+    for mix, t in samples:
+        assert abs(be.iteration_time(mix) - t) / t < 0.15
+
+
+def test_moe_flops_scale_with_topk_not_experts():
+    cfg = get_config("granite-moe-1b-a400m")
+    g = OperatorGraph.from_config(cfg)
+    mix = BatchMix.from_batch([(1024, 0)], [])
+    f, _ = g.totals(mix)
+    n_active = cfg.active_param_count() - cfg.vocab_size * cfg.d_model
+    assert f < 2 * n_active * 1024 * 1.5, \
+        "MoE FLOPs must follow active params"

@@ -1,0 +1,128 @@
+"""DES kernel: SimPy-subset semantics + deterministic tie-breaking."""
+import pytest
+
+from repro.core.engine import Environment, Store, all_of
+
+
+def test_timeout_ordering():
+    env = Environment()
+    log = []
+
+    def proc(name, delay):
+        yield env.timeout(delay)
+        log.append((env.now, name))
+
+    env.process(proc("b", 2.0))
+    env.process(proc("a", 1.0))
+    env.process(proc("c", 3.0))
+    env.run()
+    assert log == [(1.0, "a"), (2.0, "b"), (3.0, "c")]
+    assert env.now == 3.0
+
+
+def test_same_time_deterministic_seq_order():
+    """Events at identical timestamps fire in creation order."""
+    for _ in range(3):
+        env = Environment()
+        log = []
+
+        def proc(name):
+            yield env.timeout(1.0)
+            log.append(name)
+
+        for name in "abcdef":
+            env.process(proc(name))
+        env.run()
+        assert log == list("abcdef")
+
+
+def test_event_chain_and_values():
+    env = Environment()
+    out = []
+
+    def producer(ev):
+        yield env.timeout(5.0)
+        ev.succeed("payload")
+
+    def consumer(ev):
+        val = yield ev
+        out.append((env.now, val))
+
+    ev = env.event()
+    env.process(producer(ev))
+    env.process(consumer(ev))
+    env.run()
+    assert out == [(5.0, "payload")]
+
+
+def test_wait_on_already_processed_event():
+    env = Environment()
+    ev = env.event()
+    ev.succeed(42)
+    out = []
+
+    def late():
+        yield env.timeout(1.0)
+        val = yield ev          # ev processed long ago; must not hang
+        out.append(val)
+
+    env.process(late())
+    env.run()
+    assert out == [42]
+
+
+def test_store_fifo_blocking():
+    env = Environment()
+    store = Store(env)
+    got = []
+
+    def consumer(i):
+        item = yield store.get()
+        got.append((env.now, i, item))
+
+    def producer():
+        yield env.timeout(1.0)
+        store.put("x")
+        yield env.timeout(1.0)
+        store.put("y")
+
+    env.process(consumer(0))
+    env.process(consumer(1))
+    env.process(producer())
+    env.run()
+    assert got == [(1.0, 0, "x"), (2.0, 1, "y")]
+
+
+def test_all_of():
+    env = Environment()
+    done = []
+
+    def waiter(events):
+        yield all_of(env, events)
+        done.append(env.now)
+
+    evs = [env.timeout(t) for t in (1.0, 3.0, 2.0)]
+    env.process(waiter(evs))
+    env.run()
+    assert done == [3.0]
+
+
+def test_run_until():
+    env = Environment()
+    log = []
+
+    def p():
+        while True:
+            yield env.timeout(1.0)
+            log.append(env.now)
+
+    env.process(p())
+    env.run(until=5.5)
+    assert log == [1.0, 2.0, 3.0, 4.0, 5.0]
+    assert env.now == 5.5
+
+
+def test_negative_delay_rejected():
+    env = Environment()
+    with pytest.raises(ValueError):
+        env.timeout(-1.0)

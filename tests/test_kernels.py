@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as flash_ops
+from repro.kernels.flash_attention import ref as flash_ref
+from repro.kernels.paged_attention import ops as paged_ops
+from repro.kernels.paged_attention import ref as paged_ref
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.ssd_scan import ref as ssd_ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+FLASH_CASES = [
+    # b, sq, skv, h, hkv, d, causal, dtype
+    (2, 128, 128, 4, 2, 64, True, jnp.float32),
+    (1, 256, 256, 4, 4, 64, True, jnp.bfloat16),
+    (2, 64, 192, 4, 1, 32, False, jnp.float32),    # cross-attn ragged
+    (1, 100, 100, 2, 2, 16, True, jnp.float32),    # pad both dims
+    (1, 128, 128, 8, 8, 128, True, jnp.float32),   # MHA, mxu-sized head
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_vs_ref(case):
+    b, sq, skv, h, hkv, d, causal, dt = case
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), dt)
+    k = jax.random.normal(ks[1], (b, skv, hkv, d), dt)
+    v = jax.random.normal(ks[2], (b, skv, hkv, d), dt)
+    out = flash_ops.flash_attention(q, k, v, causal=causal,
+                                    block_q=64, block_kv=64)
+    qh, kh, vh = (jnp.moveaxis(x, 2, 1) for x in (q, k, v))
+    want = jnp.moveaxis(
+        flash_ref.attention_ref(qh, kh, vh, causal=causal), 1, 2)
+    tol = 2.5e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_softcap():
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 32))
+    k = jax.random.normal(ks[1], (1, 64, 2, 32))
+    v = jax.random.normal(ks[2], (1, 64, 2, 32))
+    out = flash_ops.flash_attention(q, k, v, causal=True, softcap=20.0,
+                                    block_q=32, block_kv=32)
+    qh, kh, vh = (jnp.moveaxis(x, 2, 1) for x in (q, k, v))
+    want = jnp.moveaxis(flash_ref.attention_ref(
+        qh, kh, vh, causal=True, softcap=20.0), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged attention
+# ---------------------------------------------------------------------------
+PAGED_CASES = [
+    (2, 4, 2, 64, 16, 16, 4, jnp.float32),
+    (3, 8, 1, 32, 32, 8, 6, jnp.float32),
+    (2, 4, 4, 64, 16, 16, 3, jnp.bfloat16),
+    (1, 16, 2, 128, 8, 32, 2, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+def test_paged_attention_vs_ref(case):
+    b, hq, hkv, d, npages, page, mp, dt = case
+    ks = jax.random.split(jax.random.key(2), 5)
+    q = jax.random.normal(ks[0], (b, hq, d), dt)
+    kp = jax.random.normal(ks[1], (npages, page, hkv, d), dt)
+    vp = jax.random.normal(ks[2], (npages, page, hkv, d), dt)
+    bt = jax.random.randint(ks[3], (b, mp), 0, npages)
+    cl = jax.random.randint(ks[4], (b,), 1, mp * page + 1)
+    out = paged_ops.paged_attention(q, kp, vp, bt, cl)
+    kh = jnp.transpose(kp, (2, 0, 1, 3))
+    vh = jnp.transpose(vp, (2, 0, 1, 3))
+    want = paged_ref.paged_attention_ref(
+        q, kh, vh, bt.astype(jnp.int32), cl.astype(jnp.int32))
+    tol = 3e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_paged_attention_respects_block_table_permutation():
+    """Same KV content through permuted page tables -> same output."""
+    b, hq, hkv, d, npages, page, mp = 1, 2, 1, 16, 8, 4, 4
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    kseq = jax.random.normal(ks[1], (mp * page, hkv, d))
+    vseq = jax.random.normal(ks[2], (mp * page, hkv, d))
+    outs = []
+    for perm in ([0, 1, 2, 3], [3, 1, 0, 2]):
+        kp = jnp.zeros((npages, page, hkv, d))
+        vp = jnp.zeros((npages, page, hkv, d))
+        for logical, phys in enumerate(perm):
+            kp = kp.at[phys].set(kseq[logical * page:(logical + 1) * page])
+            vp = vp.at[phys].set(vseq[logical * page:(logical + 1) * page])
+        bt = jnp.asarray([perm], jnp.int32)
+        cl = jnp.asarray([mp * page], jnp.int32)
+        outs.append(paged_ops.paged_attention(q, kp, vp, bt, cl))
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+SSD_CASES = [
+    (2, 128, 4, 32, 1, 64, 32),
+    (1, 96, 4, 16, 2, 32, 32),
+    (2, 100, 2, 16, 1, 16, 32),     # ragged -> pad path
+    (1, 64, 8, 64, 1, 128, 64),     # mamba2-130m-like tile
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan_vs_ref(case):
+    b, s, h, p, g, n, chunk = case
+    ks = jax.random.split(jax.random.key(4), 4)
+    xbar = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    dA_log = -dt * jnp.exp(jax.random.uniform(ks[1], (1, 1, h)))
+    Bm = jax.random.normal(ks[2], (b, s, g, n))
+    Cm = jax.random.normal(ks[3], (b, s, g, n))
+    y, fs = ssd_ops.ssd_scan(xbar, dA_log, Bm, Cm, chunk=chunk)
+    yw, fsw = ssd_ref.ssd_scan_ref(xbar, dA_log, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yw),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fs), np.asarray(fsw),
+                               rtol=1e-4, atol=1e-4)

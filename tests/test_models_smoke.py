@@ -1,0 +1,133 @@
+"""Per-arch smoke tests (assignment requirement): reduced same-family
+config, one forward/train step on CPU, output shapes + no NaNs; plus
+prefill/decode consistency against the full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, CONFIGS, get_smoke_config
+from repro.models import model_zoo as zoo
+
+ALL_ARCHS = ASSIGNED + ["llama2-7b", "opt-13b"]
+
+
+def make_batch(cfg, key, b=2, s=32):
+    ks = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(ks[0], (b, s), 0, cfg.vocab_size),
+             "labels": jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size)}
+    if cfg.family in ("audio", "encdec"):
+        batch["embeds"] = jax.random.normal(
+            ks[2], (b, cfg.enc_seq_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_forward_and_train_step(name):
+    cfg = get_smoke_config(name)
+    model = zoo.build(cfg)
+    params = zoo.init_params(model, jax.random.key(0))
+    batch = make_batch(cfg, jax.random.key(1))
+    logits, aux = jax.jit(zoo.forward, static_argnums=0)(model, params,
+                                                         batch)
+    b, s = batch["tokens"].shape
+    assert logits.shape == (b, s, model.plan.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    loss, metrics = jax.jit(zoo.loss_fn, static_argnums=0)(model, params,
+                                                           batch)
+    assert np.isfinite(float(loss))
+    g = jax.jit(jax.grad(lambda p: zoo.loss_fn(model, p, batch)[0]))(params)
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(g))
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_prefill_decode_consistency(name):
+    cfg = get_smoke_config(name)
+    model = zoo.build(cfg)
+    params = zoo.init_params(model, jax.random.key(2))
+    batch = make_batch(cfg, jax.random.key(3))
+    b, s = batch["tokens"].shape
+
+    cache = zoo.init_cache(model, b, s + 4)
+    logits_pf, cache = jax.jit(zoo.prefill, static_argnums=0)(
+        model, params, batch, cache)
+    logits_fw, _ = jax.jit(zoo.forward, static_argnums=0)(model, params,
+                                                          batch)
+    np.testing.assert_allclose(np.asarray(logits_pf, np.float32),
+                               np.asarray(logits_fw, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+    tok = jnp.argmax(logits_pf[:, -1, :model.plan.vocab_logical],
+                     -1).astype(jnp.int32)
+    logits_d, cache = jax.jit(zoo.decode_step, static_argnums=0)(
+        model, params, cache, tok)
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.concatenate([batch["tokens"], tok[:, None]], 1)
+    batch2.pop("labels")
+    logits_fw2, _ = jax.jit(zoo.forward, static_argnums=0)(model, params,
+                                                           batch2)
+    np.testing.assert_allclose(np.asarray(logits_d, np.float32),
+                               np.asarray(logits_fw2[:, -1], np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_scan_vs_unrolled(name):
+    """scan-over-layers and the unrolled loop are the same function."""
+    cfg = get_smoke_config(name)
+    m_scan = zoo.build(cfg)
+    m_unroll = m_scan.with_settings(scan_layers=False)
+    params = zoo.init_params(m_scan, jax.random.key(4))
+    batch = make_batch(cfg, jax.random.key(5))
+    l1, _ = jax.jit(zoo.forward, static_argnums=0)(m_scan, params, batch)
+    l2, _ = jax.jit(zoo.forward, static_argnums=0)(m_unroll, params, batch)
+    # bf16 compute fuses differently between lowerings, and MoE top-k can
+    # flip on router-logit near-ties for isolated tokens — require 99.5%
+    # of logits to agree instead of exact allclose.
+    a = np.asarray(l1, np.float32)
+    b = np.asarray(l2, np.float32)
+    close = np.isclose(a, b, rtol=5e-2, atol=5e-2)
+    assert close.mean() > 0.995, f"only {close.mean():.4f} close"
+
+
+def test_full_configs_match_assignment():
+    """The full-size configs carry the exact assigned hyperparameters."""
+    spec = {
+        "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+        "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "mamba2-130m": (24, 768, None, None, 0, 50280),
+        "whisper-base": (12, 512, 8, 8, 2048, 51865),
+    }
+    for name, (L, d, h, kv, ff, v) in spec.items():
+        cfg = CONFIGS[name]
+        assert cfg.num_layers == L, name
+        assert cfg.d_model == d, name
+        if h is not None:
+            assert cfg.n_heads == h and cfg.n_kv_heads == kv, name
+        assert cfg.d_ff == ff, name
+        assert cfg.vocab_size == v, name
+    assert CONFIGS["mamba2-130m"].ssm.d_state == 128
+    assert CONFIGS["zamba2-2.7b"].ssm.d_state == 64
+    assert CONFIGS["granite-moe-1b-a400m"].moe.num_experts == 32
+    assert CONFIGS["granite-moe-1b-a400m"].moe.top_k == 8
+    assert CONFIGS["granite-moe-3b-a800m"].moe.top_k == 8
+
+
+def test_param_counts_plausible():
+    """Full configs land near their nameplate sizes."""
+    approx = {"qwen3-14b": 14e9, "stablelm-3b": 2.8e9,
+              "internlm2-1.8b": 1.8e9, "qwen2-0.5b": 0.5e9,
+              "chameleon-34b": 34e9, "mamba2-130m": 0.13e9,
+              "zamba2-2.7b": 2.7e9, "whisper-base": 0.072e9,
+              "granite-moe-1b-a400m": 1.3e9, "granite-moe-3b-a800m": 3.4e9}
+    for name, want in approx.items():
+        got = CONFIGS[name].param_count()
+        assert 0.55 * want < got < 1.8 * want, \
+            (name, f"{got:.2e}", f"{want:.2e}")

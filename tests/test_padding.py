@@ -1,0 +1,69 @@
+"""Pad-to-shard planning properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ASSIGNED, get_config
+from repro.configs.base import ArchConfig, DENSE
+from repro.distributed.padding import make_pad_plan
+
+
+def test_identity_at_tp1():
+    for name in ASSIGNED:
+        cfg = get_config(name)
+        plan = make_pad_plan(cfg, tp=1)
+        assert plan.n_q == cfg.n_heads
+        assert plan.n_kv == cfg.n_kv_heads
+        assert plan.kv_rep == 1
+        if cfg.moe:
+            assert plan.n_experts == cfg.moe.num_experts
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_assigned_archs_shard_at_tp16(name):
+    cfg = get_config(name)
+    plan = make_pad_plan(cfg, tp=16)
+    if cfg.n_heads:
+        assert plan.n_q % 16 == 0, (name, plan.n_q)
+        assert plan.n_kv % 16 == 0 or plan.n_kv == 0
+        assert plan.n_q >= cfg.n_heads
+        # every device's q heads use that device's kv head
+        assert plan.n_q == plan.n_kv * plan.group
+        mask = plan.q_head_mask()
+        assert mask.sum() == cfg.n_heads
+    assert plan.vocab % 256 == 0 and plan.vocab >= cfg.vocab_size
+    if cfg.moe:
+        assert plan.n_experts % 16 == 0
+        assert plan.n_experts >= cfg.moe.num_experts
+    if cfg.ssm:
+        assert plan.ssm_heads % 16 == 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(hkv=st.sampled_from([1, 2, 4, 8, 16, 32]),
+       group=st.integers(1, 8),
+       tp=st.sampled_from([1, 2, 4, 8, 16]))
+def test_pad_plan_properties(hkv, group, tp):
+    hq = hkv * group
+    if hkv < tp and tp % hkv:
+        return                           # unsupported combo, raises
+    cfg = ArchConfig(name="t", family=DENSE, num_layers=1, d_model=64,
+                     n_heads=hq, n_kv_heads=hkv, head_dim=8, d_ff=64,
+                     vocab_size=1000)
+    plan = make_pad_plan(cfg, tp=tp)
+    # devices hold whole numbers of q heads and kv heads
+    assert plan.n_q % tp == 0
+    assert plan.n_kv % tp == 0
+    # logical heads all present exactly once
+    mask = plan.q_head_mask()
+    assert mask.sum() == hq
+    # padded fraction is bounded (never more than double)
+    assert plan.n_q <= max(2 * hq, tp)
+    # physical q head i uses physical kv head i // group; check the
+    # logical mapping is consistent: each logical kv head's group of
+    # logical q heads lands on copies of that kv head
+    qs_per_kv = plan.group
+    for phys_q in range(plan.n_q):
+        phys_kv = phys_q // qs_per_kv
+        orig_kv = phys_kv // plan.kv_rep
+        assert orig_kv < hkv

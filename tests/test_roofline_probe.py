@@ -1,0 +1,49 @@
+"""Depth-probe extrapolation correctness: linear reconstruction from two
+reduced depths must equal the directly-compiled deeper model."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ArchConfig, DENSE
+from repro.models import model_zoo as zoo
+from benchmarks.roofline_report import extrapolate
+
+
+def _cost(cfg, depth):
+    c = cfg.with_overrides(num_layers=depth)
+    model = zoo.build(c).with_settings(scan_layers=False,
+                                       attn_impl="naive")
+    params_s = zoo.param_specs(model)
+    batch = {"tokens": jax.ShapeDtypeStruct((2, 128), jnp.int32)}
+    comp = jax.jit(lambda p, b: zoo.forward(model, p, b)[0]) \
+        .lower(params_s, batch).compile()
+    return comp.cost_analysis()
+
+
+BASE = ArchConfig(name="probe-test", family=DENSE, num_layers=6,
+                  d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+                  d_ff=128, vocab_size=512)
+
+
+def test_linear_in_depth_and_extrapolation(monkeypatch):
+    c2, c4, c6 = (_cost(BASE, d) for d in (2, 4, 6))
+    # affine in depth: f(6) == f(4) + (f(4) - f(2))
+    want = c4["flops"] + (c4["flops"] - c2["flops"])
+    assert abs(want - c6["flops"]) / c6["flops"] < 1e-6
+
+    # the report's extrapolate() reproduces the full-depth numbers
+    import benchmarks.roofline_report as rr
+    monkeypatch.setattr(rr, "get_config", lambda name: BASE)
+    ra = {"arch": "probe-test", "shape": "train_4k", "mesh": "16x16",
+          "n_devices": 256, "depth_override": 2,
+          "cost": {"flops": c2["flops"],
+                   "bytes accessed": c2["bytes accessed"]},
+          "collectives": {"total_bytes": 0.0}}
+    rb = {**ra, "depth_override": 4,
+          "cost": {"flops": c4["flops"],
+                   "bytes accessed": c4["bytes accessed"]},
+          "collectives": {"total_bytes": 0.0}}
+    out = extrapolate(ra, rb)
+    assert abs(out["cost"]["flops"] - c6["flops"]) / c6["flops"] < 1e-6
+    assert abs(out["cost"]["bytes accessed"] - c6["bytes accessed"]) \
+        / c6["bytes accessed"] < 0.02     # byte constants ~affine

@@ -1,0 +1,163 @@
+"""Real engine correctness + the paper's validation protocol in miniature:
+the simulator (same scheduler/memory classes, tabular-calibrated cost)
+must match the real engine structurally (exact batch traces) and
+temporally (small error on throughput/latency)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.costmodel.backends import TabularBackend
+from repro.core.metrics import Results
+from repro.core.request import Request
+from repro.core.simulator import SimSpec, Simulation, WorkerSpec
+from repro.core.workload import WorkloadSpec, generate
+from repro.models import model_zoo as zoo
+from repro.serving.engine import EngineConfig, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def small_engine():
+    cfg = get_smoke_config("llama2-7b")
+    model = zoo.build(cfg)
+    params = zoo.init_params(model, jax.random.key(0))
+    return model, params
+
+
+def run_engine(model, params, reqs, **ec_kw):
+    ec = EngineConfig(num_blocks=96, block_size=8, max_batch=4,
+                      max_pages_per_seq=12, **ec_kw)
+    eng = ServingEngine(model, params, ec)
+    for r in reqs:
+        eng.add_request(r)
+    eng.run()
+    return eng
+
+
+def mk_reqs(n=8, seed=0):
+    wl = WorkloadSpec(num_requests=n, qps=0.0, seed=seed, lengths="fixed",
+                      prompt_len=20, output_len=8)
+    return generate(wl)
+
+
+def test_engine_finishes_and_counts(small_engine):
+    model, params = small_engine
+    reqs = mk_reqs(8)
+    eng = run_engine(model, params, reqs)
+    assert len(eng.finished) == 8
+    for r in reqs:
+        assert r.tokens_generated == 8
+        assert len(eng.tokens_by_req[r.id]) == 8
+
+
+def test_engine_paged_equals_contiguous_tokens(small_engine):
+    """Greedy tokens from the paged engine == contiguous-cache oracle."""
+    model, params = small_engine
+    reqs = mk_reqs(3, seed=1)
+    eng = run_engine(model, params, reqs)
+    for r in reqs:
+        prompt = jnp.asarray(eng.prompt_tokens[r.id][None])
+        cache = zoo.init_cache(model, 1, 64)
+        logits, cache = jax.jit(zoo.prefill, static_argnums=0)(
+            model, params, {"tokens": prompt}, cache)
+        tok = int(jnp.argmax(logits[0, -1, :model.plan.vocab_logical]))
+        want = [tok]
+        for _ in range(r.output_len - 1):
+            lg, cache = jax.jit(zoo.decode_step, static_argnums=0)(
+                model, params, cache, jnp.asarray([tok], jnp.int32))
+            tok = int(jnp.argmax(lg[0, :model.plan.vocab_logical]))
+            want.append(tok)
+        assert eng.tokens_by_req[r.id] == want
+
+
+def test_engine_preemption_recovers(small_engine):
+    """Tiny memory forces preemption; all requests still finish."""
+    model, params = small_engine
+    reqs = mk_reqs(6, seed=2)
+    ec = EngineConfig(num_blocks=20, block_size=8, max_batch=4,
+                      max_pages_per_seq=12)
+    eng = ServingEngine(model, params, ec)
+    for r in reqs:
+        eng.add_request(r)
+    eng.run()
+    assert len(eng.finished) == 6
+    assert all(r.tokens_generated == 8 for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# Validation protocol (paper §III-C, in miniature)
+# ---------------------------------------------------------------------------
+def sim_with_tabular(reqs_spec, samples, *, num_blocks, block_size,
+                     max_batch):
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("llama2-7b")
+    spec = SimSpec(
+        arch=cfg, workers=[WorkerSpec(hw="CPU")],
+        workload=reqs_spec, local_policy="continuous",
+        max_batch=max_batch, backend="tabular", backend_samples=samples,
+        block_size=block_size)
+    sim = Simulation(spec)
+    # force identical memory geometry to the engine
+    from repro.core.mem.block_manager import BlockManager, MemoryConfig
+    sim.workers[0].mem = BlockManager(MemoryConfig(
+        num_blocks=num_blocks, block_size=block_size,
+        kv_bytes_per_token=1.0))
+    return sim.run()
+
+
+def test_structural_validation_batch_traces_match(small_engine):
+    """With the same scheduler, memory geometry and workload, the DES
+    simulator reproduces the engine's iteration-by-iteration batch
+    composition exactly."""
+    model, params = small_engine
+    wl = WorkloadSpec(num_requests=10, qps=0.0, seed=3, lengths="fixed",
+                      prompt_len=20, output_len=8)
+    reqs = generate(wl)
+    eng = run_engine(model, params, reqs)
+    engine_trace = [(rec.kind, rec.batch_ids) for rec in eng.records]
+
+    samples = [(r.mix, r.wall) for r in eng.records]
+    res = sim_with_tabular(wl, samples, num_blocks=96, block_size=8,
+                           max_batch=4)
+    # rebuild the simulator's iteration trace from its memory timeline:
+    # instead, re-run a fresh sim capturing plans via hook
+    from repro.core.simulator import Simulation
+    spec = SimSpec(arch=get_smoke_config("llama2-7b"),
+                   workers=[WorkerSpec(hw="CPU")],
+                   workload=wl, local_policy="continuous", max_batch=4,
+                   backend="tabular", backend_samples=samples,
+                   block_size=8)
+    sim = Simulation(spec)
+    from repro.core.mem.block_manager import BlockManager, MemoryConfig
+    sim.workers[0].mem = BlockManager(MemoryConfig(
+        num_blocks=96, block_size=8, kv_bytes_per_token=1.0))
+    trace = []
+    sim.workers[0].hooks.on(
+        "after_iteration",
+        lambda w, plan, t: trace.append(
+            ("prefill" if plan.prefill else "decode",
+             tuple(r.id for r, _, _ in plan.prefill) or
+             tuple(r.id for r in plan.decode))))
+    sim.run()
+    assert trace == engine_trace
+
+
+def test_temporal_validation_throughput_close(small_engine):
+    """Calibrated sim throughput within 15% of the real engine (the
+    paper gets <1% with far more calibration data; this is the same
+    protocol at smoke scale)."""
+    model, params = small_engine
+    wl = WorkloadSpec(num_requests=12, qps=0.0, seed=4, lengths="fixed",
+                      prompt_len=20, output_len=8)
+    reqs = generate(wl)
+    eng = run_engine(model, params, reqs)
+    res_eng = Results(requests=reqs, sim_time=eng.clock)
+    thr_eng = res_eng.throughput()
+
+    samples = [(r.mix, r.wall) for r in eng.records]
+    res_sim = sim_with_tabular(wl, samples, num_blocks=96, block_size=8,
+                               max_batch=4)
+    thr_sim = res_sim.throughput()
+    err = abs(thr_sim - thr_eng) / thr_eng
+    assert err < 0.15, (thr_sim, thr_eng, err)

@@ -1,0 +1,83 @@
+"""End-to-end behaviour tests for the whole system: simulator predictions
+about real-engine behaviour hold, and the layered stack composes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.request import Request
+from repro.core.simulator import SimSpec, WorkerSpec, simulate
+from repro.core.workload import WorkloadSpec, generate
+from repro.models import model_zoo as zoo
+from repro.serving.engine import EngineConfig, ServingEngine
+
+
+def test_sim_predicts_engine_iteration_count():
+    """Continuous batching iteration count is a structural property: the
+    simulator and the real engine must agree exactly (same scheduler)."""
+    cfg = get_smoke_config("llama2-7b")
+    model = zoo.build(cfg)
+    params = zoo.init_params(model, jax.random.key(0))
+    wl = WorkloadSpec(num_requests=6, qps=0.0, seed=9, lengths="fixed",
+                      prompt_len=16, output_len=5)
+
+    reqs = generate(wl)
+    eng = ServingEngine(model, params, EngineConfig(
+        num_blocks=96, block_size=8, max_batch=4, max_pages_per_seq=8))
+    for r in reqs:
+        eng.add_request(r)
+    eng.run()
+
+    spec = SimSpec(arch=cfg, workers=[WorkerSpec(hw="CPU")], workload=wl,
+                   local_policy="continuous", max_batch=4, block_size=8)
+    from repro.core.simulator import Simulation
+    from repro.core.mem.block_manager import BlockManager, MemoryConfig
+    sim = Simulation(spec)
+    sim.workers[0].mem = BlockManager(MemoryConfig(
+        num_blocks=96, block_size=8, kv_bytes_per_token=1.0))
+    sim.run()
+    assert sim.workers[0].iterations == len(eng.records)
+
+
+def test_pallas_attention_inside_model():
+    """RunSettings(attn_impl='pallas') routes through the Pallas kernel
+    and matches the default path."""
+    cfg = get_smoke_config("llama2-7b")
+    m_ref = zoo.build(cfg)
+    m_pal = m_ref.with_settings(attn_impl="pallas", attn_block_q=32,
+                                attn_block_kv=32)
+    params = zoo.init_params(m_ref, jax.random.key(1))
+    batch = {"tokens": jax.random.randint(jax.random.key(2), (2, 64), 0,
+                                          cfg.vocab_size)}
+    l_ref, _ = zoo.forward(m_ref, params, batch)
+    l_pal, _ = zoo.forward(m_pal, params, batch)
+    np.testing.assert_allclose(np.asarray(l_pal, np.float32),
+                               np.asarray(l_ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_serving_engine_pallas_paged_path():
+    cfg = get_smoke_config("llama2-7b")
+    model = zoo.build(cfg)
+    params = zoo.init_params(model, jax.random.key(3))
+    outs = {}
+    for path in ("gather", "pallas"):
+        eng = ServingEngine(model, params, EngineConfig(
+            num_blocks=64, block_size=8, max_batch=2,
+            max_pages_per_seq=8, attn_path=path))
+        r = Request(id=0, arrival_time=0.0, prompt_len=12, output_len=6)
+        eng.add_request(r)
+        eng.run()
+        outs[path] = list(eng.tokens_by_req[0])
+    assert outs["gather"] == outs["pallas"]
+
+
+def test_hundredM_scale_param_count():
+    """examples/train_100m uses a ~100M config; verify the calc here."""
+    from repro.configs.base import ArchConfig, DENSE
+    cfg = ArchConfig(name="lm-100m", family=DENSE, num_layers=12,
+                     d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+                     vocab_size=32000, tie_embeddings=True)
+    n = cfg.param_count()
+    assert 0.9e8 < n < 1.6e8, n
