@@ -26,6 +26,8 @@ from typing import Dict, Optional
 
 from repro.configs import get_config, get_shape, shape_applicable
 from repro.configs.base import DECODE, PREFILL, TRAIN
+from repro.core.costmodel.backends import cost_analysis_dict  # noqa: F401
+#    (re-exported: the calibration tests read it from this module)
 
 PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e)
 HBM_BW = 819e9               # bytes/s per chip

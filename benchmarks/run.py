@@ -21,7 +21,8 @@ def main(argv=None):
 
     from benchmarks import (batching, disagg_ratio, disagg_validation,
                             hardware_sub, mem_footprint, memcache, memratio,
-                            platform_sweep, sim_speed, validation)
+                            platform_sweep, sim_speed, tenant_qos,
+                            validation)
 
     benches = [
         ("validation", lambda: validation.run(n_req=20 if q else 40)),
@@ -38,6 +39,7 @@ def main(argv=None):
         ("memcache", lambda: memcache.run(n_req=300 if q else 1200)),
         ("platform_sweep", lambda: platform_sweep.run(
             n_req=200 if q else 800)),
+        ("tenant_qos", lambda: tenant_qos.run(quick=q)),
     ]
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

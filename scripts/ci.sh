@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests (collection errors fail fast) + a multi-tenant
+# smoke, so "suite no longer collects" and "tenancy demo broke" both
+# surface before merge.
+#
+#   bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: examples/multi_tenant.py (<30s) =="
+timeout 30 python examples/multi_tenant.py > /dev/null
+echo "multi-tenant smoke OK"

@@ -8,6 +8,7 @@ pool) -> comm -> sched (global/local) -> worker -> simulator facade.
 from repro.core.engine import Environment  # noqa: F401
 from repro.core.request import Request, State  # noqa: F401
 from repro.core.workload import WorkloadSpec, generate  # noqa: F401
-from repro.core.metrics import Results  # noqa: F401
+from repro.core.metrics import Results, jain_index  # noqa: F401
 from repro.core.simulator import (SimSpec, WorkerSpec, FaultSpec,  # noqa: F401
                                   Simulation, simulate)
+from repro.core.tenancy import TenantSpec, TenantTier  # noqa: F401

@@ -29,6 +29,17 @@ def cdf_points(xs: Sequence[float], n: int = 100) -> List[Tuple[float, float]]:
             for i in range(n + 1)]
 
 
+def jain_index(xs: Sequence[float]) -> float:
+    """Jain's fairness index: (Σx)² / (n·Σx²) ∈ (0, 1], 1 = equal."""
+    xs = [x for x in xs if x == x]        # drop NaNs
+    if not xs:
+        return float("nan")
+    sq = sum(x * x for x in xs)
+    if sq == 0.0:
+        return 1.0
+    return sum(xs) ** 2 / (len(xs) * sq)
+
+
 @dataclass
 class Results:
     requests: List[Request]
@@ -37,6 +48,10 @@ class Results:
     pool_stats: Optional[dict] = None
     wall_time: float = 0.0
     events: int = 0
+    #: tenant_id -> TenantSpec when the sim ran with tenants (tenancy)
+    tenant_specs: Optional[Dict[str, object]] = None
+    #: AdmissionController.stats() snapshot at end of sim
+    admission_stats: Optional[Dict[str, Dict[str, float]]] = None
 
     # ------------------------------------------------------------------
     @property
@@ -92,6 +107,84 @@ class Results:
         n = len(self.requests)
         return sum(r.preempt_count for r in self.requests) / max(1, n)
 
+    # ---- multi-tenant breakdowns (repro.core.tenancy) -----------------
+    def tenant_ids(self) -> List[str]:
+        if self.tenant_specs:
+            return sorted(self.tenant_specs)
+        return sorted({r.tenant_id for r in self.requests
+                       if r.tenant_id is not None})
+
+    def for_tenant(self, tenant_id: str) -> "Results":
+        """A Results view restricted to one tenant's requests (shares the
+        simulation span, so rates remain comparable across tenants)."""
+        return Results(
+            requests=[r for r in self.requests if r.tenant_id == tenant_id],
+            sim_time=self.sim_time,
+            tenant_specs=self.tenant_specs)
+
+    def tenant_token_throughputs(self) -> Dict[str, float]:
+        """Generated tokens/s per tenant over the shared finished-span —
+        the quantity WFQ shares by weight."""
+        f = self.finished
+        if not f:
+            return {t: 0.0 for t in self.tenant_ids()}
+        span = max(r.t_finish for r in f) - min(r.arrival_time for r in f)
+        out = {}
+        for t in self.tenant_ids():
+            toks = sum(r.tokens_generated for r in f if r.tenant_id == t)
+            out[t] = toks / max(span, 1e-9)
+        return out
+
+    def fairness_index(self, *, weighted: bool = False) -> float:
+        """Jain index over per-tenant token throughput; ``weighted``
+        normalizes each tenant by its tier weight first, so 1.0 means
+        throughput shares match configured weights exactly."""
+        tps = self.tenant_token_throughputs()
+        xs = []
+        for t, v in sorted(tps.items()):
+            w = 1.0
+            if weighted and self.tenant_specs and t in self.tenant_specs:
+                w = max(getattr(self.tenant_specs[t].tier, "weight", 1.0),
+                        1e-9)
+            xs.append(v / w)
+        return jain_index(xs)
+
+    def tenant_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant latency/TTFT percentiles, SLO attainment, goodput,
+        rejects and gateway queueing delay.  Per-tenant counters sum to
+        the aggregate (property-tested in tests/test_tenancy.py)."""
+        out: Dict[str, Dict[str, float]] = {}
+        tps = self.tenant_token_throughputs()
+        for t in self.tenant_ids():
+            sub = self.for_tenant(t)
+            spec = (self.tenant_specs or {}).get(t)
+            ttft_slo = getattr(getattr(spec, "tier", None), "ttft_slo", 0.0)
+            tpot_slo = getattr(getattr(spec, "tier", None), "tpot_slo", 0.0)
+            fin = sub.finished
+            n_ok = sum(1 for r in fin if r.meets_slo(ttft_slo, tpot_slo))
+            qd = [r.queue_delay for r in sub.requests
+                  if r.queue_delay is not None]
+            row = {
+                "n_requests": len(sub.requests),
+                "n_finished": len(fin),
+                "n_rejected": sum(1 for r in sub.requests if r.rejected),
+                "tokens": sum(r.tokens_generated for r in fin),
+                "token_tps": tps.get(t, 0.0),
+                "latency_p50": percentile(sub.latencies(), 50),
+                "latency_p99": percentile(sub.latencies(), 99),
+                "ttft_p50": percentile(sub.ttfts(), 50),
+                "ttft_p99": percentile(sub.ttfts(), 99),
+                "queue_delay_mean": sum(qd) / len(qd) if qd
+                else 0.0,
+                "slo_attainment": n_ok / len(sub.requests)
+                if sub.requests else float("nan"),
+                "goodput_rps": sub.slo_goodput(
+                    ttft_slo=ttft_slo, mtpot_slo=tpot_slo),
+                "preempt_rate": sub.preemption_rate(),
+            }
+            out[t] = row
+        return out
+
     def summary(self, *, ttft_slo: float = 0.0,
                 mtpot_slo: float = 0.0) -> Dict[str, float]:
         out = {"throughput_rps": self.throughput(),
@@ -109,4 +202,9 @@ class Results:
                 ttft_slo=ttft_slo, mtpot_slo=mtpot_slo)
         if self.pool_stats:
             out.update({f"pool_{k}": v for k, v in self.pool_stats.items()})
+        if self.tenant_specs:
+            out["n_rejected"] = sum(1 for r in self.requests if r.rejected)
+            out["fairness_jain"] = self.fairness_index()
+            out["fairness_jain_weighted"] = self.fairness_index(
+                weighted=True)
         return out

@@ -14,6 +14,7 @@ class State(enum.Enum):
     DECODE = "decode"
     PREEMPTED = "preempted"    # swapped out / pending recompute
     FINISHED = "finished"
+    REJECTED = "rejected"      # dropped by admission control (429)
 
 
 @dataclass
@@ -28,6 +29,12 @@ class Request:
     round_idx: int = 0
     history_len: int = 0                 # tokens of prior rounds (KV reusable)
 
+    # multi-tenant QoS (repro.core.tenancy)
+    tenant_id: Optional[str] = None
+    priority: int = 0                    # tier priority (larger = higher)
+    weight: float = 1.0                  # WFQ share
+    vft: float = 0.0                     # virtual finish time (WFQ tag)
+
     # runtime state
     state: State = State.QUEUED
     tokens_generated: int = 0
@@ -37,6 +44,7 @@ class Request:
     preempt_count: int = 0
 
     # timestamps
+    t_admitted: Optional[float] = None   # released by admission control
     t_first_token: Optional[float] = None
     t_finish: Optional[float] = None
     token_times: List[float] = field(default_factory=list)
@@ -65,6 +73,10 @@ class Request:
     def finished(self) -> bool:
         return self.tokens_generated >= self.output_len
 
+    @property
+    def rejected(self) -> bool:
+        return self.state == State.REJECTED
+
     # -- metrics ---------------------------------------------------------
     @property
     def latency(self) -> Optional[float]:
@@ -81,6 +93,12 @@ class Request:
     def ttft(self) -> Optional[float]:
         return None if self.t_first_token is None \
             else self.t_first_token - self.arrival_time
+
+    @property
+    def queue_delay(self) -> Optional[float]:
+        """Time held at the admission gateway (rate limit / inflight cap)."""
+        return None if self.t_admitted is None \
+            else self.t_admitted - self.arrival_time
 
     @property
     def max_tpot(self) -> Optional[float]:

@@ -22,6 +22,13 @@ class GlobalScheduler:
         default keeps the request where it is."""
         return req.worker_id
 
+    def discipline(self):
+        """Queue discipline the workers should order their waiting queues
+        by, or None for FIFO.  Tenant-aware policies override this so the
+        cluster-wide ordering (repro.core.tenancy.qos) stays consistent
+        with the dispatch-side record book."""
+        return None
+
 
 def _eligible(workers, *, prefill=None, decode=None):
     out = []
@@ -120,7 +127,71 @@ class HeterogeneityAware(GlobalScheduler):
                    (w.load_tokens() / max(w.hw.mem_bw, 1.0), w.wid)).wid
 
 
+@dataclass
+class WeightedFairQueuing(GlobalScheduler):
+    """Weighted fair queuing over tenants via virtual finish times
+    (start-time fair queuing variant).
+
+    Each request is tagged ``vft = max(V, last_vft[tenant]) +
+    cost/weight`` at dispatch; workers admit waiting requests in vft
+    order (WFQDiscipline), so backlogged tenants receive token service
+    proportional to their weights.  The virtual clock ``V`` advances to
+    the start tag of each request entering service, which denies idle
+    tenants retroactive credit (a returning tenant resumes at the
+    current frontier instead of monopolizing the cluster)."""
+
+    fallback: GlobalScheduler = field(default_factory=LeastLoaded)
+    _v: float = 0.0
+    _last_vft: Dict[str, float] = field(default_factory=dict)
+
+    def assign(self, req, workers):
+        if req.vft == 0.0:
+            # stamp exactly once: failure redispatch sends orphans back
+            # through assign(), which must not re-charge the tenant's
+            # virtual clock for work it was already billed for
+            tid = req.tenant_id or "_default"
+            cost = float(req.prompt_len + req.output_len)
+            start = max(self._v, self._last_vft.get(tid, 0.0))
+            req.vft = start + cost / max(req.weight, 1e-9)
+            self._last_vft[tid] = req.vft
+        return self.fallback.assign(req, workers)
+
+    def reassign(self, req, workers):
+        return self.fallback.reassign(req, workers)
+
+    def on_service_start(self, req) -> None:
+        cost = float(req.prompt_len + req.output_len)
+        self._v = max(self._v, req.vft - cost / max(req.weight, 1e-9))
+
+    def discipline(self):
+        from repro.core.tenancy.qos import WFQDiscipline
+        return WFQDiscipline(self)
+
+
+@dataclass
+class PriorityAging(GlobalScheduler):
+    """Strict priority across tenant tiers with linear aging: workers
+    admit the highest effective priority first, where effective priority
+    grows by ``aging_rate`` points per second of queueing (starvation
+    guard).  Under memory pressure the preemption path evicts the lowest
+    tier first, so low-tier requests yield KV blocks to high-tier ones."""
+
+    aging_rate: float = 0.0
+    fallback: GlobalScheduler = field(default_factory=LeastLoaded)
+
+    def assign(self, req, workers):
+        return self.fallback.assign(req, workers)
+
+    def reassign(self, req, workers):
+        return self.fallback.reassign(req, workers)
+
+    def discipline(self):
+        from repro.core.tenancy.qos import PriorityAgingDiscipline
+        return PriorityAgingDiscipline(self.aging_rate)
+
+
 def make_global_scheduler(kind: str, **kw) -> GlobalScheduler:
     return {"round_robin": RoundRobin, "least_loaded": LeastLoaded,
             "disagg": DisaggPD, "session_affinity": SessionAffinity,
-            "hetero": HeterogeneityAware}[kind](**kw)
+            "hetero": HeterogeneityAware, "wfq": WeightedFairQueuing,
+            "priority": PriorityAging}[kind](**kw)

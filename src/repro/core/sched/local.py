@@ -34,6 +34,40 @@ class LocalScheduler:
         raise NotImplementedError
 
 
+# Waiting-queue protocol with FIFO fallback: full workers (core.worker,
+# serving.engine) expose tenant-aware ordering; minimal stub workers
+# (tests, user schedulers) only need ``waiting``/``running``/``mem``.
+def _next_waiting(worker) -> Optional[Request]:
+    get = getattr(worker, "next_waiting", None)
+    if get is not None:
+        return get()
+    return worker.waiting[0] if worker.waiting else None
+
+
+def _pop_waiting(worker, req: Request) -> None:
+    pop = getattr(worker, "pop_waiting", None)
+    if pop is not None:
+        pop(req)
+    else:
+        worker.waiting.remove(req)
+
+
+def _victim_sort_key(worker):
+    f = getattr(worker, "victim_sort_key", None)
+    return f() if f is not None else (lambda r: (r.arrival_time, r.id))
+
+
+def _prefill_sort_key(worker):
+    """Order competing prefills inside one iteration: FIFO by default,
+    discipline order (priority / virtual finish time) when the worker
+    has a tenant-aware queue discipline."""
+    disc = getattr(worker, "discipline", None)
+    if disc is None:
+        return lambda r: (r.arrival_time, r.id)
+    return disc.admit_key(worker.env.now if hasattr(worker, "env")
+                          else getattr(worker, "clock", 0.0))
+
+
 @dataclass
 class StaticBatching(LocalScheduler):
     """Classic static batching: fill a batch, run it to completion, only
@@ -48,12 +82,12 @@ class StaticBatching(LocalScheduler):
             # batch finished: admit a fresh one (reserving room for each
             # request's full output — static batching predates paging)
             while worker.waiting and len(plan.admitted) < self.max_batch:
-                req = worker.waiting[0]
+                req = _next_waiting(worker)
                 ctx = max(1, req.context_len)
                 if not worker.mem.can_allocate(
                         ctx, headroom_tokens=req.output_len):
                     break
-                worker.waiting.popleft()
+                _pop_waiting(worker, req)
                 worker.mem.allocate(req, ctx, reserve=req.output_len)
                 plan.admitted.append(req)
             running = plan.admitted
@@ -94,7 +128,7 @@ class ContinuousBatching(LocalScheduler):
         # ---- admission ------------------------------------------------
         n_running = len(worker.running)
         while worker.waiting and n_running + len(plan.admitted) < self.max_batch:
-            req = worker.waiting[0]
+            req = _next_waiting(worker)
             need = max(1, req.context_len)
             if req.cached_len == 0 and worker.pool is not None \
                     and req.history_len > 0:
@@ -103,7 +137,7 @@ class ContinuousBatching(LocalScheduler):
                 plan.retrieve_latency = max(plan.retrieve_latency, lat)
             if not mem.can_allocate(need, respect_watermark=True):
                 break
-            worker.waiting.popleft()
+            _pop_waiting(worker, req)
             mem.allocate(req, need)
             plan.admitted.append(req)
 
@@ -116,7 +150,7 @@ class ContinuousBatching(LocalScheduler):
         budget = self.max_batched_tokens
         if prefills and not self.chunked_prefill:
             # prefill-prioritized iteration (no decodes mixed in)
-            for r in sorted(prefills, key=lambda r: r.arrival_time):
+            for r in sorted(prefills, key=_prefill_sort_key(worker)):
                 chunk = min(r.remaining_prefill, budget)
                 if chunk <= 0:
                     break
@@ -127,15 +161,19 @@ class ContinuousBatching(LocalScheduler):
 
         if self.chunked_prefill and prefills:
             budget -= len(decodes)        # decodes cost 1 token each
-            r = min(prefills, key=lambda r: r.arrival_time)
+            r = min(prefills, key=_prefill_sort_key(worker))
             chunk = min(r.remaining_prefill, self.prefill_chunk,
                         max(0, budget))
             if chunk > 0:
                 plan.prefill.append(
                     (r, chunk, max(r.cached_len, r.prefill_done_len)))
 
-        # ---- decodes, preempting on OOM (newest first) ------------------
-        decodes.sort(key=lambda r: (r.arrival_time, r.id))
+        # ---- decodes, preempting on OOM -------------------------------
+        # Victim order comes from the worker's queue discipline: FIFO
+        # evicts the newest arrival (seed behaviour); tenant-aware
+        # disciplines evict the lowest tier / least-entitled first, so
+        # low-tier requests yield KV blocks to high-tier ones.
+        decodes.sort(key=_victim_sort_key(worker))
         survivors: List[Request] = list(decodes)
 
         # check appends feasible; evict newest until they are

@@ -6,6 +6,17 @@ between iterations; memory managers track device memory; a communication
 model prices inter-worker KV movement (disaggregation, Fig. 7); an
 optional memory pool serves multi-round conversations (Fig. 14); fault /
 straggler injection exercises the mitigation policies.
+
+Multi-tenant QoS layer (repro.core.tenancy, beyond paper): when
+``SimSpec.tenants`` is set, per-tenant workloads are merged into one
+deterministic arrival stream and an ``AdmissionController`` — a
+simulated API gateway with per-tenant token buckets and in-flight caps —
+sits between the dispatcher and the global scheduler.  Tenant-aware
+global policies ("wfq", "priority") hand every worker a shared queue
+discipline, so weighted-fair / strict-priority ordering applies both at
+dispatch and inside each worker's waiting queue, and the preemption path
+evicts low-tier KV first.  ``Results`` then offers per-tenant latency /
+SLO-attainment / goodput breakdowns and Jain's fairness index.
 """
 from __future__ import annotations
 
@@ -30,8 +41,9 @@ from repro.core.request import Request, State
 from repro.core.sched.global_sched import (GlobalScheduler,
                                            make_global_scheduler)
 from repro.core.sched.local import make_local_scheduler
+from repro.core.tenancy import AdmissionController, TenantSpec
 from repro.core.worker import Worker
-from repro.core.workload import WorkloadSpec, generate
+from repro.core.workload import WorkloadSpec, generate, generate_multi
 
 
 @dataclass(frozen=True)
@@ -60,6 +72,8 @@ class SimSpec:
     workers: Sequence[WorkerSpec] = (WorkerSpec(),)
     workload: WorkloadSpec = field(default_factory=WorkloadSpec)
     global_policy: str = "least_loaded"
+    #: extra kwargs for make_global_scheduler (e.g. {"aging_rate": 2.0})
+    global_policy_kw: Dict[str, object] = field(default_factory=dict)
     local_policy: str = "continuous"
     max_batch: int = 256
     max_batched_tokens: int = 2048
@@ -74,6 +88,10 @@ class SimSpec:
     backend_samples: Optional[list] = None   # for tabular
     backends_by_worker: Optional[Dict[int, CostBackend]] = None
     until: Optional[float] = None
+    #: multi-tenant QoS: when set, each tenant's workload is merged into
+    #: one stream and admission control gates the dispatcher
+    #: (``workload`` above is then ignored)
+    tenants: Sequence[TenantSpec] = ()
 
 
 class Simulation:
@@ -84,9 +102,13 @@ class Simulation:
         self.env = Environment()
         self.link = comm_mod.Link(self.env, spec.kv_link)
         self.pool = MemoryPool(spec.pool) if spec.pool else None
-        self.requests: List[Request] = generate(spec.workload)
+        self.requests: List[Request] = generate_multi(spec.tenants) \
+            if spec.tenants else generate(spec.workload)
         self.global_sched: GlobalScheduler = make_global_scheduler(
-            spec.global_policy)
+            spec.global_policy, **spec.global_policy_kw)
+        self.admission: Optional[AdmissionController] = \
+            AdmissionController(self.env, spec.tenants, self) \
+            if spec.tenants else None
         self.workers: List[Worker] = []
         self._build_workers()
         self._n_finished = 0
@@ -128,7 +150,8 @@ class Simulation:
                        run_prefill=ws.role in ("both", "prefill"),
                        run_decode=ws.role in ("both", "decode"),
                        cluster=self, pool=self.pool, hooks=hooks,
-                       enc_tokens_per_req=enc_tokens)
+                       enc_tokens_per_req=enc_tokens,
+                       discipline=self.global_sched.discipline())
             w.slowdown = ws.slowdown
             self.workers.append(w)
 
@@ -154,6 +177,8 @@ class Simulation:
 
     def on_request_finished(self, req: Request) -> None:
         self._n_finished += 1
+        if self.admission is not None:
+            self.admission.on_finish(req)
 
     def redispatch(self, orphans: List[Request]) -> None:
         for req in sorted(orphans, key=lambda r: r.id):
@@ -167,8 +192,11 @@ class Simulation:
             delay = req.arrival_time - env.now
             if delay > 0:
                 yield env.timeout(delay)
-            wid = self.global_sched.assign(req, self.workers)
-            self.workers[wid].submit(req)
+            if self.admission is not None:
+                self.admission.submit(req)
+            else:
+                wid = self.global_sched.assign(req, self.workers)
+                self.workers[wid].submit(req)
 
     def _fault_injector(self):
         env = self.env
@@ -202,7 +230,11 @@ class Simulation:
             worker_mem={w.wid: w.mem_timeline for w in self.workers},
             pool_stats=self.pool.stats() if self.pool else None,
             wall_time=wall,
-            events=sum(w.iterations for w in self.workers))
+            events=sum(w.iterations for w in self.workers),
+            tenant_specs={t.tenant_id: t for t in self.spec.tenants}
+            if self.spec.tenants else None,
+            admission_stats=self.admission.stats()
+            if self.admission else None)
 
 
 def simulate(spec: SimSpec) -> Results:

@@ -1,0 +1,18 @@
+"""Multi-tenant QoS: tenant specs, admission control, fair scheduling.
+
+The subsystem threads tenant identity through the whole stack:
+
+    TenantSpec (tier + workload)                 [spec.py]
+      -> merged arrival stream                   [core.workload]
+      -> AdmissionController (token bucket)      [admission.py]
+      -> tenant-aware GlobalScheduler            [core.sched.global_sched]
+      -> QueueDiscipline on each worker          [qos.py]
+      -> per-tenant Results breakdowns           [core.metrics]
+"""
+from repro.core.tenancy.admission import (AdmissionController,  # noqa: F401
+                                          TokenBucket)
+from repro.core.tenancy.qos import (PriorityAgingDiscipline,  # noqa: F401
+                                    QueueDiscipline, WFQDiscipline)
+from repro.core.tenancy.spec import (ADMISSION_POLICIES, ENTERPRISE,  # noqa: F401
+                                     FREE, PRO, QUEUE, REJECT, SHED,
+                                     TIERS, TenantSpec, TenantTier)

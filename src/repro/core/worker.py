@@ -37,7 +37,8 @@ class Worker:
                  run_decode: bool = True, cluster=None,
                  pool: Optional[MemoryPool] = None,
                  hooks: Optional[Hooks] = None,
-                 enc_tokens_per_req: int = 0):
+                 enc_tokens_per_req: int = 0,
+                 discipline=None):
         self.env = env
         self.wid = wid
         self.hw = hw
@@ -50,6 +51,8 @@ class Worker:
         self.pool = pool
         self.hooks = hooks or Hooks()
         self.enc_tokens_per_req = enc_tokens_per_req
+        #: tenant-aware queue ordering (repro.core.tenancy.qos); None=FIFO
+        self.discipline = discipline
 
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []
@@ -76,6 +79,24 @@ class Worker:
         req.prefill_done_len = req.prefill_target
         self.waiting.append(req)
         self._wakeup()
+
+    def next_waiting(self) -> Optional[Request]:
+        """Head of the waiting queue under the active discipline."""
+        if not self.waiting:
+            return None
+        if self.discipline is None:
+            return self.waiting[0]
+        return self.discipline.select(self.waiting, self.env.now)
+
+    def pop_waiting(self, req: Request) -> None:
+        self.waiting.remove(req)
+
+    def victim_sort_key(self):
+        """Ascending sort key such that the END of the sorted running
+        list is the first preemption victim."""
+        if self.discipline is None:
+            return lambda r: (r.arrival_time, r.id)
+        return self.discipline.victim_key(self.env.now)
 
     def load_tokens(self) -> int:
         return sum(max(1, r.remaining_prefill) + 1 for r in self.waiting) \
@@ -105,6 +126,8 @@ class Worker:
                     State.DECODE
                 if req not in self.running:
                     self.running.append(req)
+                if self.discipline is not None:
+                    self.discipline.on_service_start(req, env.now)
                 self.hooks.fire("on_admit", self, req)
             for req in plan.preempted:
                 req.state = State.PREEMPTED

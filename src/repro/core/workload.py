@@ -15,8 +15,9 @@ from __future__ import annotations
 import json
 import math
 import random
-from dataclasses import dataclass, field
-from typing import Iterator, List, Optional
+import zlib
+from dataclasses import dataclass, field, replace
+from typing import Iterator, List, Optional, Sequence
 
 from repro.core.request import Request
 
@@ -113,6 +114,38 @@ def generate(spec: WorkloadSpec) -> List[Request]:
     reqs.sort(key=lambda r: (r.arrival_time, r.id))
     for i, r in enumerate(reqs):
         r.id = i                          # stable ids in arrival order
+    return reqs
+
+
+def generate_multi(tenants: Sequence) -> List[Request]:
+    """Merge per-tenant workloads into one deterministic arrival stream.
+
+    ``tenants`` is a sequence of ``repro.core.tenancy.TenantSpec`` (held
+    duck-typed here to keep the workload layer tenancy-agnostic).  Each
+    tenant's stream is generated with a seed decorrelated by a stable
+    hash of its id, stamped with the tenant's identity and QoS tags, and
+    the union is re-sorted into a single arrival order with stable ids.
+    """
+    reqs: List[Request] = []
+    order = {t.tenant_id: i for i, t in enumerate(tenants)}
+    if len(order) != len(tenants):
+        raise ValueError("duplicate tenant_id in tenant specs")
+    for t in tenants:
+        ws = t.workload
+        sub = generate(replace(
+            ws, seed=ws.seed ^ zlib.crc32(t.tenant_id.encode())))
+        for r in sub:
+            r.tenant_id = t.tenant_id
+            r.priority = t.tier.priority
+            r.weight = t.tier.weight
+            if r.session_id is not None:
+                # keep sessions distinct across tenants
+                r.session_id = r.session_id * len(tenants) \
+                    + order[t.tenant_id]
+        reqs.extend(sub)
+    reqs.sort(key=lambda r: (r.arrival_time, order[r.tenant_id], r.id))
+    for i, r in enumerate(reqs):
+        r.id = i
     return reqs
 
 

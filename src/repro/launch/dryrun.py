@@ -28,6 +28,7 @@ import jax.numpy as jnp  # noqa: E402
 from repro.configs import (ASSIGNED, get_config, get_shape,  # noqa: E402
                            LM_SHAPES, shape_applicable)
 from repro.configs.base import TRAIN, PREFILL, DECODE  # noqa: E402
+from repro.core.costmodel.backends import cost_analysis_dict  # noqa: E402
 from repro.distributed import shard_plan  # noqa: E402
 from repro.distributed.api import use_rules  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
@@ -271,7 +272,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled.cost_analysis())
     hlo = compiled.as_text()
     if save_hlo:
         with open(save_hlo, "w") as f:

@@ -58,10 +58,12 @@ class IterationRecord:
 
 class ServingEngine:
     def __init__(self, model: zoo.Model, params, ec: EngineConfig,
-                 pool: Optional[MemoryPool] = None):
+                 pool: Optional[MemoryPool] = None, discipline=None):
         self.model = model
         self.params = params
         self.ec = ec
+        #: tenant-aware queue ordering (repro.core.tenancy.qos); None=FIFO
+        self.discipline = discipline
         self.paged = paged_model.supports_paged(model)
 
         mc = MemoryConfig(num_blocks=ec.num_blocks,
@@ -114,6 +116,22 @@ class ServingEngine:
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
 
+    # -- waiting-queue protocol shared with core.worker.Worker ---------
+    def next_waiting(self) -> Optional[Request]:
+        if not self.waiting:
+            return None
+        if self.discipline is None:
+            return self.waiting[0]
+        return self.discipline.select(self.waiting, self.clock)
+
+    def pop_waiting(self, req: Request) -> None:
+        self.waiting.remove(req)
+
+    def victim_sort_key(self):
+        if self.discipline is None:
+            return lambda r: (r.arrival_time, r.id)
+        return self.discipline.victim_key(self.clock)
+
     # ------------------------------------------------------------------
     def step(self) -> Optional[IterationRecord]:
         plan = self.sched.plan(self)
@@ -124,6 +142,8 @@ class ServingEngine:
                 State.DECODE
             if req not in self.running:
                 self.running.append(req)
+            if self.discipline is not None:
+                self.discipline.on_service_start(req, self.clock)
             if self.paged:
                 pass                     # block table comes from self.mem
             else:

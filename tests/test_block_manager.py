@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.mem.block_manager import BlockManager, MemoryConfig
 from repro.core.request import Request

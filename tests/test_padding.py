@@ -1,7 +1,7 @@
 """Pad-to-shard planning properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import ASSIGNED, get_config
 from repro.configs.base import ArchConfig, DENSE

@@ -8,7 +8,8 @@ import pytest
 
 from repro.configs.base import ArchConfig, DENSE
 from repro.models import model_zoo as zoo
-from benchmarks.roofline_report import _tri_pairs, attn_correction
+from benchmarks.roofline_report import (_tri_pairs, attn_correction,
+                                        cost_analysis_dict)
 
 
 def _flops(model, batch):
@@ -18,7 +19,7 @@ def _flops(model, batch):
         return zoo.forward(model, p, b)[0]
 
     lowered = jax.jit(fwd).lower(params_s, batch)
-    return lowered.compile().cost_analysis()["flops"]
+    return cost_analysis_dict(lowered.compile().cost_analysis())["flops"]
 
 
 def test_unrolled_plus_correction_matches_loopfree():

@@ -6,7 +6,7 @@ import pytest
 
 from repro.configs.base import ArchConfig, DENSE
 from repro.models import model_zoo as zoo
-from benchmarks.roofline_report import extrapolate
+from benchmarks.roofline_report import cost_analysis_dict, extrapolate
 
 
 def _cost(cfg, depth):
@@ -17,7 +17,7 @@ def _cost(cfg, depth):
     batch = {"tokens": jax.ShapeDtypeStruct((2, 128), jnp.int32)}
     comp = jax.jit(lambda p, b: zoo.forward(model, p, b)[0]) \
         .lower(params_s, batch).compile()
-    return comp.cost_analysis()
+    return cost_analysis_dict(comp.cost_analysis())
 
 
 BASE = ArchConfig(name="probe-test", family=DENSE, num_layers=6,
