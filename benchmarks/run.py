@@ -21,8 +21,8 @@ def main(argv=None):
 
     from benchmarks import (batching, disagg_ratio, disagg_validation,
                             hardware_sub, mem_footprint, memcache, memratio,
-                            platform_sweep, sim_speed, tenant_qos,
-                            validation)
+                            platform_sweep, sim_speed, spec_decode,
+                            tenant_qos, validation)
 
     benches = [
         ("validation", lambda: validation.run(n_req=20 if q else 40)),
@@ -40,6 +40,7 @@ def main(argv=None):
         ("platform_sweep", lambda: platform_sweep.run(
             n_req=200 if q else 800)),
         ("tenant_qos", lambda: tenant_qos.run(quick=q)),
+        ("spec_decode", lambda: spec_decode.run(quick=q)),
     ]
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

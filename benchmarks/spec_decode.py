@@ -1,0 +1,85 @@
+"""Speculative-decoding sweep: K x acceptance-rate x batch size.
+
+Reproduces the two headline properties of speculation in serving:
+
+  * at batch 1 (weight-bandwidth-bound decode), K=4 drafts with
+    acceptance >= 0.8 yield >= 1.5x effective tokens per target step,
+  * at high batch occupancy the same configuration is net-NEGATIVE in
+    token throughput (the crossover: verify work becomes compute-bound,
+    so rejected draft tokens and the draft model's own iterations cost
+    more than the extra tokens are worth).
+
+Run:  PYTHONPATH=src python -m benchmarks.spec_decode
+      PYTHONPATH=src python -m benchmarks.run --quick --only spec_decode
+"""
+from __future__ import annotations
+
+from benchmarks.common import Bench, fmt
+from repro.core import (AcceptanceModel, SimSpec, SpecDecodeSpec, WorkerSpec,
+                        simulate)
+from repro.core.workload import WorkloadSpec
+
+ARCH = "llama2-7b"
+DRAFT = "qwen2-0.5b"
+
+
+def _case(*, batch: int, k: int = 0, acc: float = 0.0,
+          num_requests: int = 0, output_len: int = 64):
+    """One simulation: spec decoding enabled iff ``k > 0``."""
+    wl = WorkloadSpec(
+        num_requests=num_requests or max(2 * batch, 8), qps=0.0,
+        lengths="fixed", prompt_len=128, output_len=output_len, seed=0)
+    spec = None
+    if k > 0:
+        spec = SpecDecodeSpec(draft_arch=DRAFT, lookahead=k,
+                              acceptance=AcceptanceModel(rate=acc))
+    return simulate(SimSpec(
+        arch=ARCH, workers=[WorkerSpec(hw="A100")], workload=wl,
+        max_batch=batch, max_batched_tokens=4096, spec_decode=spec))
+
+
+def run(quick: bool = False) -> None:
+    bench = Bench("spec_decode")
+    batches = (1, 64) if quick else (1, 16, 64)
+    ks = (4,) if quick else (2, 4, 8)
+    accs = (0.8,) if quick else (0.5, 0.8, 0.95)
+
+    # ---- sweep: K x acceptance x batch --------------------------------
+    for batch in batches:
+        base = _case(batch=batch)
+        base_tps = base.token_throughput()
+        for k in ks:
+            for acc in accs:
+                res = _case(batch=batch, k=k, acc=acc)
+                s = res.spec_summary()
+                bench.add(batch=batch, k=k, acc=acc,
+                          base_tps=fmt(base_tps, 1),
+                          spec_tps=fmt(res.token_throughput(), 1),
+                          speedup=fmt(res.token_throughput() / base_tps, 3),
+                          eff_tokens_per_step=fmt(
+                              s["eff_tokens_per_step"], 3),
+                          acceptance=fmt(s["acceptance_rate"], 3))
+
+    # ---- headline checks (report FAIL, don't abort the driver) --------
+    lo = _case(batch=1, k=4, acc=0.8)
+    eff = lo.spec_summary()["eff_tokens_per_step"]
+    lo_base = _case(batch=1).token_throughput()
+    hi, hi_base = _case(batch=64, k=4, acc=0.8), _case(batch=64)
+    ok = (eff >= 1.5                                   # >=1.5x tokens/step
+          and lo.token_throughput() > lo_base          # net-positive at b=1
+          and hi.token_throughput() < hi_base.token_throughput())  # crossover
+
+    bench.finish(
+        f"{'PASS' if ok else 'FAIL'} "
+        f"eff_tokens_per_step@b1={eff:.2f} "
+        f"b1_speedup={lo.token_throughput() / lo_base:.2f} "
+        f"b64_speedup={hi.token_throughput() / hi_base.token_throughput():.2f}")
+    print(f"batch=1  : {lo_base:8.1f} -> {lo.token_throughput():8.1f} tok/s "
+          f"({eff:.2f} tokens/step) — speculation wins")
+    print(f"batch=64 : {hi_base.token_throughput():8.1f} -> "
+          f"{hi.token_throughput():8.1f} tok/s — crossover: speculation "
+          f"net-negative at high occupancy")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,98 @@
+"""Docs CI gate: internal markdown links must resolve, and every
+benchmark/example module must carry a docstring.
+
+Checks:
+  1. every relative link in docs/*.md and README.md points at an
+     existing file/directory; ``#anchor`` fragments must match a
+     heading slug (GitHub-style) in the target file,
+  2. every ``benchmarks/*.py`` and ``examples/*.py`` has a module
+     docstring (they are the runnable documentation of the repo).
+
+Run:  python scripts/check_docs.py        (exits non-zero on failure)
+"""
+from __future__ import annotations
+
+import ast
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — excluding images and in-code spans is overkill here;
+# fenced code blocks are stripped before matching
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def strip_code_blocks(text: str) -> str:
+    return re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+
+
+def heading_slugs(path: str) -> set:
+    """GitHub-style anchor slugs for every heading in a markdown file."""
+    slugs = set()
+    with open(path) as f:
+        text = strip_code_blocks(f.read())
+    for h in HEADING_RE.findall(text):
+        h = re.sub(r"`([^`]*)`", r"\1", h)           # unwrap code spans
+        slug = re.sub(r"[^\w\- ]", "", h.lower()).strip()
+        slugs.add(re.sub(r"\s+", "-", slug))
+    return slugs
+
+
+def check_links(md_path: str) -> list:
+    errors = []
+    with open(md_path) as f:
+        text = strip_code_blocks(f.read())
+    base = os.path.dirname(md_path)
+    for target in LINK_RE.findall(text):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, …
+            continue
+        target, _, frag = target.partition("#")
+        dest = md_path if not target else \
+            os.path.normpath(os.path.join(base, target))
+        if target and not os.path.exists(dest):
+            errors.append(f"{os.path.relpath(md_path, ROOT)}: broken link "
+                          f"-> {target}")
+            continue
+        if frag and dest.endswith(".md"):
+            if frag not in heading_slugs(dest):
+                errors.append(f"{os.path.relpath(md_path, ROOT)}: anchor "
+                              f"#{frag} not found in "
+                              f"{os.path.relpath(dest, ROOT)}")
+    return errors
+
+
+def check_module_docstrings(pattern: str) -> list:
+    errors = []
+    for py in sorted(glob.glob(os.path.join(ROOT, pattern))):
+        with open(py) as f:
+            tree = ast.parse(f.read(), filename=py)
+        if not ast.get_docstring(tree):
+            errors.append(f"{os.path.relpath(py, ROOT)}: missing module "
+                          f"docstring")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    docs = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    if not docs:
+        errors.append("docs/: no markdown files found")
+    for md in docs + [os.path.join(ROOT, "README.md")]:
+        errors.extend(check_links(md))
+    errors.extend(check_module_docstrings("benchmarks/*.py"))
+    errors.extend(check_module_docstrings("examples/*.py"))
+    for e in errors:
+        print(f"docs-check FAIL: {e}")
+    if not errors:
+        n = len(docs) + 1
+        print(f"docs-check OK: {n} markdown files, links + anchors resolve, "
+              f"all benchmarks/examples have module docstrings")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 tests (collection errors fail fast) + a multi-tenant
-# smoke, so "suite no longer collects" and "tenancy demo broke" both
-# surface before merge.
+# CI gate: docs check + tier-1 tests (collection errors fail fast) +
+# smokes, so "suite no longer collects", "docs link rotted" and "demo
+# broke" all surface before merge.
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -9,9 +9,16 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== docs: links + module docstrings =="
+python scripts/check_docs.py
+
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
 echo "== smoke: examples/multi_tenant.py (<30s) =="
 timeout 30 python examples/multi_tenant.py > /dev/null
 echo "multi-tenant smoke OK"
+
+echo "== smoke: examples/speculative.py (<30s) =="
+timeout 30 python examples/speculative.py > /dev/null
+echo "speculative-decoding smoke OK"

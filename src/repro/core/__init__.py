@@ -11,4 +11,6 @@ from repro.core.workload import WorkloadSpec, generate  # noqa: F401
 from repro.core.metrics import Results, jain_index  # noqa: F401
 from repro.core.simulator import (SimSpec, WorkerSpec, FaultSpec,  # noqa: F401
                                   Simulation, simulate)
+from repro.core.specdecode import (AcceptanceModel,  # noqa: F401
+                                   SpecDecodeSpec)
 from repro.core.tenancy import TenantSpec, TenantTier  # noqa: F401

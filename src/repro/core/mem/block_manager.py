@@ -121,7 +121,12 @@ class BlockManager:
         return need <= self.num_free
 
     def append_tokens(self, req: Request, n: int = 1) -> None:
-        """Grow req's context by n tokens, taking new blocks as needed."""
+        """Grow req's context by n tokens, taking new blocks as needed.
+
+        Speculative decoding appends the full draft window (K+1 tokens)
+        before verify and pairs it with ``rollback_tokens`` for the
+        rejected suffix, so accept/rollback is two symmetric calls and
+        the coverage invariant holds between iterations."""
         assert req.id in self.tables, f"req {req.id} not resident"
         if self.mc.kv_bytes_per_token <= 0:
             self.token_counts[req.id] += n
@@ -135,6 +140,28 @@ class BlockManager:
             blocks.append(self.free_blocks.pop())
         self.token_counts[req.id] = cur + n
         self.peak_used = max(self.peak_used, self.num_used)
+
+    def rollback_tokens(self, req: Request, n: int = 1) -> int:
+        """Shrink req's context by n tokens (rejected speculative drafts),
+        releasing blocks that no longer cover any token.  Blocks return
+        to the free list in reverse allocation order — the same
+        discipline ``free`` uses — so allocation patterns stay
+        deterministic.  Returns #blocks released."""
+        if n <= 0:
+            return 0
+        assert req.id in self.tables, f"req {req.id} not resident"
+        cur = self.token_counts[req.id]
+        assert n <= cur, f"rollback {n} exceeds resident {cur}"
+        self.token_counts[req.id] = cur - n
+        if self.mc.kv_bytes_per_token <= 0:
+            return 0                      # constant state: nothing paged
+        blocks = self.tables[req.id]
+        keep = self.blocks_needed(cur - n) if cur - n > 0 else 0
+        released = 0
+        while len(blocks) > keep:
+            self.free_blocks.append(blocks.pop())
+            released += 1
+        return released
 
     def free(self, req: Request) -> int:
         """Release all blocks of req; returns #blocks released."""

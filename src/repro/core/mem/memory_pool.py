@@ -1,4 +1,6 @@
-"""Multi-round KV memory pool (CachedAttention / MemServe; paper §IV-E).
+"""Multi-round KV memory pool and prompt-prefix trie.
+
+Citations: CachedAttention / MemServe (paper §IV-E, Fig. 14).
 
 Finished conversations park their KV in a tiered pool (host DRAM or a
 disaggregated memory pool); a follow-up round of the same session reuses

@@ -107,6 +107,27 @@ class Results:
         n = len(self.requests)
         return sum(r.preempt_count for r in self.requests) / max(1, n)
 
+    # ---- speculative decoding (repro.core.specdecode) -----------------
+    def spec_summary(self) -> Dict[str, float]:
+        """Aggregate speculative-decoding counters: acceptance rate of
+        draft tokens, effective tokens emitted per verify step (the
+        speedup lever: 1.0 means speculation bought nothing), and the
+        fraction of tokens produced speculatively."""
+        steps = sum(r.spec_steps for r in self.requests)
+        proposed = sum(r.draft_proposed for r in self.requests)
+        accepted = sum(r.draft_accepted for r in self.requests)
+        spec_tokens = sum(r.spec_tokens for r in self.requests)
+        total_tokens = sum(r.tokens_generated for r in self.requests)
+        return {
+            "spec_steps": steps,
+            "acceptance_rate": accepted / proposed if proposed
+            else float("nan"),
+            "eff_tokens_per_step": spec_tokens / steps if steps
+            else float("nan"),
+            "spec_token_frac": spec_tokens / total_tokens if total_tokens
+            else 0.0,
+        }
+
     # ---- multi-tenant breakdowns (repro.core.tenancy) -----------------
     def tenant_ids(self) -> List[str]:
         if self.tenant_specs:
@@ -202,6 +223,9 @@ class Results:
                 ttft_slo=ttft_slo, mtpot_slo=mtpot_slo)
         if self.pool_stats:
             out.update({f"pool_{k}": v for k, v in self.pool_stats.items()})
+        if any(r.spec_steps for r in self.requests):
+            out.update({f"spec_{k}" if not k.startswith("spec_") else k: v
+                        for k, v in self.spec_summary().items()})
         if self.tenant_specs:
             out["n_rejected"] = sum(1 for r in self.requests if r.rejected)
             out["fairness_jain"] = self.fairness_index()

@@ -43,6 +43,12 @@ class Request:
     worker_id: Optional[int] = None
     preempt_count: int = 0
 
+    # speculative decoding (repro.core.specdecode)
+    spec_steps: int = 0                  # verify steps taken
+    spec_tokens: int = 0                 # tokens emitted by spec steps
+    draft_proposed: int = 0              # draft tokens proposed (Σ K)
+    draft_accepted: int = 0              # draft tokens accepted by target
+
     # timestamps
     t_admitted: Optional[float] = None   # released by admission control
     t_first_token: Optional[float] = None
@@ -99,6 +105,13 @@ class Request:
         """Time held at the admission gateway (rate limit / inflight cap)."""
         return None if self.t_admitted is None \
             else self.t_admitted - self.arrival_time
+
+    @property
+    def acceptance_rate(self) -> Optional[float]:
+        """Fraction of draft tokens the target accepted (spec decode)."""
+        if self.draft_proposed == 0:
+            return None
+        return self.draft_accepted / self.draft_proposed
 
     @property
     def max_tpot(self) -> Optional[float]:

@@ -13,6 +13,14 @@ from repro.core.request import Request
 
 
 class GlobalScheduler:
+    """Base class for cluster-level dispatch policies.
+
+    Subclasses override ``assign`` (and optionally ``reassign`` for the
+    disaggregated prefill→decode hand-off and ``discipline`` for
+    worker-queue ordering); they may keep internal state — the paper's
+    "record book" pattern.
+    """
+
     def assign(self, req: Request, workers: List) -> int:
         """Pick the worker for a new request (prefill side)."""
         raise NotImplementedError
@@ -45,6 +53,9 @@ def _eligible(workers, *, prefill=None, decode=None):
 
 @dataclass
 class RoundRobin(GlobalScheduler):
+    """Cycle new requests over prefill-capable workers in worker order —
+    the stateless baseline every study compares against."""
+
     _next: int = 0
 
     def assign(self, req, workers):
@@ -191,7 +202,18 @@ class PriorityAging(GlobalScheduler):
 
 
 def make_global_scheduler(kind: str, **kw) -> GlobalScheduler:
-    return {"round_robin": RoundRobin, "least_loaded": LeastLoaded,
-            "disagg": DisaggPD, "session_affinity": SessionAffinity,
-            "hetero": HeterogeneityAware, "wfq": WeightedFairQueuing,
-            "priority": PriorityAging}[kind](**kw)
+    """Build a global policy by name (see docs/POLICIES.md for the full
+    reference table).  ``disagg_pd`` and ``heterogeneity_aware`` are
+    long-form aliases of ``disagg`` / ``hetero``."""
+    registry = {"round_robin": RoundRobin, "least_loaded": LeastLoaded,
+                "disagg": DisaggPD, "disagg_pd": DisaggPD,
+                "session_affinity": SessionAffinity,
+                "hetero": HeterogeneityAware,
+                "heterogeneity_aware": HeterogeneityAware,
+                "wfq": WeightedFairQueuing, "priority": PriorityAging}
+    try:
+        cls = registry[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown global scheduler {kind!r}; have {sorted(registry)}")
+    return cls(**kw)

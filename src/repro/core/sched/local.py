@@ -1,5 +1,8 @@
-"""Local (per-worker) schedulers: static vs continuous batching, chunked
-prefill, and the prefill/decode-only restrictions for disaggregation.
+"""Local (per-worker) schedulers: batching policies for one accelerator.
+
+Citations: static vs continuous batching follows Orca/vLLM (paper
+Fig. 8); chunked prefill is Sarathi-style; speculative-decode budgeting
+follows Leviathan et al. 2023 (see repro.core.specdecode).
 
 A policy builds an ``IterationPlan`` from the worker's waiting queue,
 running set and memory manager — the full system state, per the paper's
@@ -18,13 +21,16 @@ class IterationPlan:
     #: (req, chunk_len, ctx_before) — prompt tokens computed this iteration
     prefill: List[Tuple[Request, int, int]] = field(default_factory=list)
     decode: List[Request] = field(default_factory=list)
+    #: requests decoding speculatively this iteration (draft + verify);
+    #: disjoint from ``decode``
+    spec_decode: List[Request] = field(default_factory=list)
     admitted: List[Request] = field(default_factory=list)
     preempted: List[Request] = field(default_factory=list)
     retrieve_latency: float = 0.0        # memory-pool fetches this iter
 
     @property
     def empty(self) -> bool:
-        return not (self.prefill or self.decode)
+        return not (self.prefill or self.decode or self.spec_decode)
 
 
 class LocalScheduler:
@@ -141,8 +147,11 @@ class ContinuousBatching(LocalScheduler):
             mem.allocate(req, need)
             plan.admitted.append(req)
 
-        running = [r for r in worker.running if not r.finished] \
-            + plan.admitted
+        # MIGRATING requests' KV is in flight to another worker: they
+        # stay in ``running`` until the transfer completes but must not
+        # be planned (their blocks are released mid-iteration)
+        running = [r for r in worker.running if not r.finished
+                   and r.state is not State.MIGRATING] + plan.admitted
         prefills = [r for r in running if r.remaining_prefill > 0]
         decodes = [r for r in running if r.remaining_prefill == 0]
 
@@ -193,7 +202,46 @@ class ContinuousBatching(LocalScheduler):
             victim.preempt_count += 1
             plan.preempted.append(victim)
         plan.decode = survivors
+        self._assign_speculative(worker, plan)
         return plan
+
+    def _assign_speculative(self, worker, plan: IterationPlan) -> None:
+        """Upgrade planned decodes to speculative mode where they fit.
+
+        Each speculative request bills K+1 verify tokens against
+        ``max_batched_tokens`` (a normal decode bills 1) and may need
+        extra KV blocks for its draft window.  Requests that don't fit
+        the token budget or the remaining free blocks stay on the normal
+        decode path, so mixed spec/non-spec batches schedule correctly
+        and speculation never triggers a preemption by itself."""
+        spec_cfg = getattr(worker, "spec_decode", None)
+        if spec_cfg is None or not plan.decode:
+            return
+        mem = worker.mem
+        k1 = spec_cfg.verify_tokens
+        budget = self.max_batched_tokens \
+            - sum(c for _, c, _ in plan.prefill) - len(plan.decode)
+        # blocks already committed to the +1 growth of every planned decode
+        committed = sum(
+            mem.blocks_needed(mem.resident_tokens(r) + 1)
+            - len(mem.block_table(r))
+            for r in plan.decode if mem.resident(r))
+        free = mem.num_free - committed
+        chosen = []
+        for r in plan.decode:              # already in discipline order
+            if budget < k1 - 1:
+                break
+            res = mem.resident_tokens(r) if mem.resident(r) else 0
+            extra = mem.blocks_needed(res + k1) - mem.blocks_needed(res + 1)
+            if extra > free:
+                continue
+            free -= extra
+            budget -= k1 - 1
+            chosen.append(r)
+        if chosen:
+            ids = {r.id for r in chosen}
+            plan.spec_decode = chosen
+            plan.decode = [r for r in plan.decode if r.id not in ids]
 
 
 def make_local_scheduler(kind: str, **kw) -> LocalScheduler:

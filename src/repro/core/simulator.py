@@ -41,6 +41,7 @@ from repro.core.request import Request, State
 from repro.core.sched.global_sched import (GlobalScheduler,
                                            make_global_scheduler)
 from repro.core.sched.local import make_local_scheduler
+from repro.core.specdecode import SpecDecodeSpec
 from repro.core.tenancy import AdmissionController, TenantSpec
 from repro.core.worker import Worker
 from repro.core.workload import WorkloadSpec, generate, generate_multi
@@ -92,6 +93,10 @@ class SimSpec:
     #: one stream and admission control gates the dispatcher
     #: (``workload`` above is then ignored)
     tenants: Sequence[TenantSpec] = ()
+    #: speculative decoding (repro.core.specdecode): when set, decode
+    #: iterations draft ``lookahead`` tokens with the draft model and
+    #: verify them in one target forward (continuous batching only)
+    spec_decode: Optional[SpecDecodeSpec] = None
 
 
 class Simulation:
@@ -120,6 +125,10 @@ class Simulation:
     def _build_workers(self) -> None:
         spec = self.spec
         disagg = any(w.role != "both" for w in spec.workers)
+        draft_cfg = None
+        if spec.spec_decode is not None:
+            da = spec.spec_decode.draft_arch
+            draft_cfg = da if isinstance(da, ArchConfig) else get_config(da)
         for i, ws in enumerate(spec.workers):
             hw = HARDWARE[ws.hw]
             if ws.hw_overrides:
@@ -146,12 +155,22 @@ class Simulation:
             hooks = disagg_hooks() if disagg else Hooks()
             enc_tokens = self.cfg.enc_seq_len \
                 if self.cfg.family in ("audio", "encdec") else 0
+            draft_backend = None
+            if draft_cfg is not None:
+                # draft model runs on the same chip as its worker (with
+                # optional overrides, e.g. a dedicated draft unit)
+                dhw = hw.with_(**spec.spec_decode.draft_hw_overrides) \
+                    if spec.spec_decode.draft_hw_overrides else hw
+                draft_backend = RooflineBackend.for_model(
+                    draft_cfg, dhw, tp=ws.tp, dtype_bytes=spec.dtype_bytes)
             w = Worker(self.env, i, hw, backend, mem_cfg, sched,
                        run_prefill=ws.role in ("both", "prefill"),
                        run_decode=ws.role in ("both", "decode"),
                        cluster=self, pool=self.pool, hooks=hooks,
                        enc_tokens_per_req=enc_tokens,
-                       discipline=self.global_sched.discipline())
+                       discipline=self.global_sched.discipline(),
+                       spec_decode=spec.spec_decode,
+                       draft_backend=draft_backend)
             w.slowdown = ws.slowdown
             self.workers.append(w)
 

@@ -1,5 +1,8 @@
 """Multi-tenant QoS: tenant specs, admission control, fair scheduling.
 
+Citations: beyond-paper subsystem; see spec.py, admission.py and qos.py
+for the per-technique references (Limitador, SFQ, priority aging).
+
 The subsystem threads tenant identity through the whole stack:
 
     TenantSpec (tier + workload)                 [spec.py]

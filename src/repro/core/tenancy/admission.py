@@ -1,5 +1,8 @@
 """Admission control: simulated API-gateway rate limiting.
 
+Citations: token-bucket limiting as in Limitador/Kuadrant and cloud LLM
+gateways; reject/queue/shed mirror RFC 6585 (429) semantics.
+
 One DES process per tenant sits between the dispatcher and the global
 scheduler (the Limitador/Kuadrant position in a production stack).  Each
 tenant has a token bucket over ``prompt+output`` tokens and an optional

@@ -1,5 +1,8 @@
 """Tenant-aware queue disciplines for the worker's waiting queue.
 
+Citations: start-time fair queuing (Goyal et al. 1996) for WFQ tags;
+priority aging is the classic starvation guard from OS schedulers.
+
 The local schedulers consult a ``QueueDiscipline`` to pick which waiting
 request to admit next and which running request to evict first under
 memory pressure.  The default (None) keeps the seed's FIFO / newest-

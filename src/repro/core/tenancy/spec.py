@@ -1,5 +1,8 @@
 """Tenant tiers and per-tenant QoS contracts.
 
+Citations: token-bucket gateway limiting follows Limitador/Kuadrant;
+tiered SLO contracts follow production LLM API pricing tiers.
+
 A ``TenantTier`` is the QoS contract an operator sells: scheduling
 weight/priority, a token-bucket rate limit (tokens/s + burst, the
 Limitador/Kuadrant role in production gateways), per-tenant latency SLOs

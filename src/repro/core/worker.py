@@ -38,7 +38,8 @@ class Worker:
                  pool: Optional[MemoryPool] = None,
                  hooks: Optional[Hooks] = None,
                  enc_tokens_per_req: int = 0,
-                 discipline=None):
+                 discipline=None, spec_decode=None,
+                 draft_backend: Optional[CostBackend] = None):
         self.env = env
         self.wid = wid
         self.hw = hw
@@ -53,6 +54,11 @@ class Worker:
         self.enc_tokens_per_req = enc_tokens_per_req
         #: tenant-aware queue ordering (repro.core.tenancy.qos); None=FIFO
         self.discipline = discipline
+        #: speculative decoding (repro.core.specdecode); None = disabled
+        self.spec_decode = spec_decode
+        self.draft_backend = draft_backend
+        self._spec_rng = spec_decode.rng_for_worker(wid) \
+            if spec_decode is not None else None
 
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []
@@ -135,18 +141,30 @@ class Worker:
                     self.running.remove(req)
                 self.waiting.appendleft(req)   # retry first (vLLM order)
 
-            # KV must grow before the decode step executes
+            # KV must grow before the decode step executes; speculative
+            # requests book the whole draft window, the rejected suffix
+            # is rolled back after verification
             for req in plan.decode:
                 self.mem.append_tokens(req, 1)
+            verify = []
+            if plan.spec_decode:
+                k1 = self.spec_decode.verify_tokens
+                for req in plan.spec_decode:
+                    self.mem.append_tokens(req, k1)
+                    # K+1 causal query positions over the live context:
+                    # costed like a prefill chunk in the target's mix
+                    verify.append((k1, req.context_len))
 
             mix = BatchMix.from_batch(
-                [(c, b) for _, c, b in plan.prefill],
+                [(c, b) for _, c, b in plan.prefill] + verify,
                 [r.context_len for r in plan.decode],
                 enc_tokens=self.enc_tokens_per_req * sum(
                     1 for r, c, b in plan.prefill
                     if b == 0))
             t = self.backend.iteration_time(mix) * self.slowdown \
                 + plan.retrieve_latency
+            if plan.spec_decode:
+                t += self._draft_time(plan.spec_decode) * self.slowdown
             yield env.timeout(t)
             now = env.now
             self.iterations += 1
@@ -161,6 +179,8 @@ class Worker:
                     self._emit_token(req, now)
             for req in plan.decode:
                 self._emit_token(req, now)
+            for req in plan.spec_decode:
+                self._apply_spec_step(req, now)
 
             self.mem_timeline.append(MemSample(
                 now, self.mem.num_used, self.mem.used_bytes(),
@@ -168,6 +188,33 @@ class Worker:
             self.hooks.fire("after_iteration", self, plan, t)
 
     # ------------------------------------------------------------------
+    def _draft_time(self, spec_reqs: List[Request]) -> float:
+        """Cost of the draft model proposing K tokens: K sequential
+        decode iterations of the draft backend over the speculative
+        sub-batch (context grows by one per draft position)."""
+        cfg = self.spec_decode
+        t = 0.0
+        for k in range(cfg.lookahead):
+            mix = BatchMix.from_batch(
+                [], [r.context_len + k for r in spec_reqs])
+            t += self.draft_backend.iteration_time(mix)
+        return t
+
+    def _apply_spec_step(self, req: Request, now: float) -> None:
+        """Sample the verify outcome: keep the accepted draft prefix plus
+        the bonus token, roll rejected tokens' KV blocks back, emit."""
+        cfg = self.spec_decode
+        accepted = cfg.acceptance.sample_accepted(
+            self._spec_rng, cfg.lookahead)
+        emitted = min(accepted + 1, req.output_len - req.tokens_generated)
+        req.spec_steps += 1
+        req.spec_tokens += emitted
+        req.draft_proposed += cfg.lookahead
+        req.draft_accepted += accepted
+        self.mem.rollback_tokens(req, cfg.verify_tokens - emitted)
+        for _ in range(emitted):
+            self._emit_token(req, now)
+
     def _emit_token(self, req: Request, now: float) -> None:
         first = req.tokens_generated == 0
         req.tokens_generated += 1

@@ -65,6 +65,25 @@ def test_trace_roundtrip(tmp_path):
         [(r.prompt_len, r.output_len) for r in reqs2]
 
 
+def test_trace_roundtrip_preserves_all_fields(tmp_path):
+    """save_trace/load keeps arrivals, sessions and round indices for a
+    multi-round workload, and a double round-trip is a fixed point."""
+    spec = WorkloadSpec(num_requests=80, qps=5.0, seed=9,
+                        multi_round_frac=0.6)
+    reqs = generate(spec)
+    p = str(tmp_path / "trace.jsonl")
+    save_trace(reqs, p)
+    reqs2 = generate(WorkloadSpec(num_requests=80, lengths="trace",
+                                  trace_path=p))
+    assert [(r.arrival_time, r.prompt_len, r.output_len, r.session_id,
+             r.round_idx) for r in reqs] == \
+        [(r.arrival_time, r.prompt_len, r.output_len, r.session_id,
+          r.round_idx) for r in reqs2]
+    p2 = str(tmp_path / "trace2.jsonl")
+    save_trace(reqs2, p2)
+    assert open(p).read() == open(p2).read()
+
+
 # ---------------------------------------------------------------------------
 def test_memory_pool_hit_miss_lru():
     pool = MemoryPool(PoolConfig(capacity_tokens=100, block_size=16))
@@ -89,6 +108,55 @@ def test_memory_pool_disabled():
     r = Request(id=0, arrival_time=0, prompt_len=10, output_len=1,
                 session_id=1, history_len=5)
     assert pool.lookup(r) == (0, 0.0)
+
+
+def test_memory_pool_eviction_under_capacity_pressure():
+    """LRU evicts in insertion/touch order and an oversized entry is
+    dropped entirely rather than thrashing the pool."""
+    pool = MemoryPool(PoolConfig(capacity_tokens=100, block_size=16))
+    pool.store(1, 40)
+    pool.store(2, 40)
+    pool.store(3, 40)                      # evicts session 1
+    assert pool.evictions == 1
+    r1 = Request(id=0, arrival_time=0, prompt_len=50, output_len=1,
+                 session_id=1, history_len=40)
+    assert pool.lookup(r1) == (0, 0.0)     # evicted: miss
+    # an entry larger than the whole pool evicts everything, then still
+    # fails to fit; the pool must stay consistent (empty, no phantom use)
+    assert pool.store(9, 1000) == 0.0
+    assert pool.used_tokens == 0
+    r9 = Request(id=1, arrival_time=0, prompt_len=1000, output_len=1,
+                 session_id=9, history_len=900)
+    assert pool.lookup(r9) == (0, 0.0)
+
+
+def test_memory_pool_lookup_caps_at_prompt_and_history():
+    """Reuse never exceeds min(cached, history_len, prompt_len)."""
+    pool = MemoryPool(PoolConfig(capacity_tokens=1000))
+    pool.store(1, 500)
+    r = Request(id=0, arrival_time=0, prompt_len=64, output_len=1,
+                session_id=1, history_len=300)
+    assert pool.lookup(r)[0] == 64         # prompt bound
+    r2 = Request(id=1, arrival_time=0, prompt_len=400, output_len=1,
+                 session_id=1, history_len=100)
+    assert pool.lookup(r2)[0] == 100       # history bound
+    r3 = Request(id=2, arrival_time=0, prompt_len=400, output_len=1,
+                 session_id=1, history_len=0)
+    assert pool.lookup(r3) == (0, 0.0)     # no shared history: miss
+
+
+def test_prefix_trie_empty():
+    t = PrefixTrie()
+    assert t.best_worker((1, 2, 3)) == (None, 0)
+    assert t.best_worker(()) == (None, 0)
+
+
+def test_prefix_trie_exact_match():
+    t = PrefixTrie()
+    t.insert((5, 6, 7), worker_id=3)
+    assert t.best_worker((5, 6, 7)) == (3, 3)     # exact, full depth
+    assert t.best_worker((5, 6)) == (3, 2)        # proper prefix
+    assert t.best_worker((5, 6, 7, 8)) == (3, 3)  # longer query
 
 
 def test_prefix_trie():
