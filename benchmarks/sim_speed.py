@@ -1,30 +1,65 @@
 """Paper Table II + Fig. 6: simulation accuracy for fixed-length
-workloads at growing request counts, and simulator runtime efficiency.
+workloads at growing request counts, simulator runtime efficiency, and
+the million-request streaming scaling curve (docs/PERFORMANCE.md).
 
-Vidur / LLMServingSim are not available offline; the comparison here is
-TokenSim vs the real engine ("Local" in Table II) plus TokenSim's own
-wall-clock scaling (the Fig. 6 claim is that TokenSim needs no
-pre-training pass and stays lightweight)."""
+Three entry points:
+
+* ``run()`` (default): TokenSim vs the real JAX engine ("Local" in
+  Table II) on 20-100 requests — accuracy plus wall-clock speedup.
+  Vidur / LLMServingSim are not available offline; the Fig. 6 claim is
+  that TokenSim needs no pre-training pass and stays lightweight.
+* ``run_scaling()`` (``--scale``): 10^4 → 10^6 requests across >= 8
+  workers in streaming mode (``SimSpec(streaming=True,
+  retain_requests=False)``), asserting live ``Request`` objects stay
+  bounded (no O(num_requests) residency) and reporting the wall-clock /
+  RSS scaling curve pasted into docs/PERFORMANCE.md.
+* ``run_smoke()`` (``--smoke``, wired into scripts/ci.sh): a 10k-request
+  streaming run under a time/RSS budget whose sketch P50/P99 must land
+  within 1% of the exact-mode percentiles — the scale-regression gate.
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
-import jax
-
-from repro.configs import get_smoke_config
-from repro.core.metrics import Results
 from repro.core.simulator import SimSpec, Simulation, WorkerSpec
-from repro.core.mem.block_manager import BlockManager, MemoryConfig
 from repro.core.workload import WorkloadSpec
-from repro.models import model_zoo as zoo
-from repro.serving.engine import EngineConfig, ServingEngine
 
 from benchmarks.common import Bench, fmt
 
 NUM_BLOCKS, BLOCK_SIZE, MAX_BATCH = 160, 8, 8
 
 
+def _current_rss_mb() -> float:
+    """Resident set size right now (not the process-lifetime peak, which
+    would attribute earlier runs' memory to the run being measured)."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS:"):
+                    return int(line.split()[1]) / 1024.0
+    except OSError:
+        pass
+    # no /proc: fall back to the lifetime peak (the best getrusage
+    # offers); ru_maxrss is KB on Linux but bytes on macOS
+    import resource
+    import sys
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return peak / (1024.0 * 1024.0) if sys.platform == "darwin" \
+        else peak / 1024.0
+
+
 def run(request_counts=(20, 40, 60, 80, 100)):
+    # jax + model building only needed for the Table II comparison, so
+    # the streaming scaling/smoke paths stay import-light
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core.mem.block_manager import BlockManager, MemoryConfig
+    from repro.core.workload import generate
+    from repro.models import model_zoo as zoo
+    from repro.serving.engine import EngineConfig, ServingEngine
+
     b = Bench("sim_speed_tab2_fig6")
     cfg = get_smoke_config("llama2-7b")
     model = zoo.build(cfg)
@@ -32,7 +67,6 @@ def run(request_counts=(20, 40, 60, 80, 100)):
 
     # calibrate once on the smallest count; first pass warms the jit
     # cache so measured walls are compute, not compilation
-    from repro.core.workload import generate
     wl0 = WorkloadSpec(num_requests=request_counts[0], qps=0.0, seed=99,
                        lengths="fixed", prompt_len=32, output_len=10)
     samples = None
@@ -81,5 +115,89 @@ def run(request_counts=(20, 40, 60, 80, 100)):
     return max_err
 
 
+def _scale_spec(n: int, n_workers: int, qps: float) -> SimSpec:
+    """Streaming drop-mode spec for the scaling curve: short fixed
+    outputs keep total token volume (the real cost driver) tractable
+    while the request count sweeps three orders of magnitude."""
+    return SimSpec(
+        arch="llama2-7b",
+        workers=[WorkerSpec() for _ in range(n_workers)],
+        workload=WorkloadSpec(num_requests=n, qps=qps, seed=7,
+                              lengths="fixed", prompt_len=64, output_len=8),
+        max_batch=128, streaming=True, retain_requests=False)
+
+
+def run_scaling(request_counts=(10_000, 100_000, 1_000_000),
+                n_workers: int = 8, qps: float = 1000.0,
+                live_cap: int = 100_000):
+    """Streaming-mode scaling curve: wall time, events, peak live
+    requests and peak RSS vs request count.  Fails if live requests
+    ever approach O(num_requests) — the bounded-memory contract."""
+    b = Bench("sim_speed_scaling")
+    for n in request_counts:
+        sim = Simulation(_scale_spec(n, n_workers, qps))
+        res = sim.run()
+        assert res.stats is not None and res.stats.n_finished == n, \
+            (n, res.stats and res.stats.n_finished)
+        assert res.max_live < min(live_cap, max(1000, n // 2)), \
+            f"live requests not bounded: {res.max_live} of {n}"
+        rss = _current_rss_mb()
+        b.add(requests=n, workers=n_workers, qps=qps,
+              wall_s=fmt(res.wall_time, 2), sim_time_s=fmt(res.sim_time, 1),
+              iterations=res.events, max_live=res.max_live,
+              kreq_per_s=fmt(n / max(res.wall_time, 1e-9) / 1e3, 1),
+              rss_mb=fmt(rss, 1))
+        print(f"  scaling n={n}: wall={res.wall_time:.2f}s "
+              f"max_live={res.max_live} rss={rss:.0f}MB")
+    b.finish(derived=f"streaming_{max(request_counts)}req_"
+                     f"{n_workers}workers_bounded_live")
+
+
+def run_smoke(n: int = 10_000, n_workers: int = 8, qps: float = 1000.0,
+              wall_budget_s: float = 60.0, rss_budget_mb: float = 1024.0):
+    """CI gate (scripts/ci.sh): streaming 10k run within a time/RSS
+    budget, sketch P50/P99 within 1% of exact mode on the same sim.
+    The exact-mode baseline runs first and is excluded from the
+    budgets: the wall clock covers only the streaming run and the RSS
+    gate samples current (not lifetime-peak) residency after it, so
+    the gate measures streaming mode, not the baseline."""
+    from dataclasses import replace
+    exact = Simulation(replace(_scale_spec(n, n_workers, qps),
+                               streaming=False,
+                               retain_requests=True)).run()
+    t0 = time.perf_counter()
+    stream = Simulation(_scale_spec(n, n_workers, qps)).run()
+    wall = time.perf_counter() - t0
+    es, ss = exact.summary(), stream.summary()
+    assert ss["n_finished"] == es["n_finished"] == n
+    for k in ("latency_p50", "latency_p99", "ttft_p50", "ttft_p99",
+              "latency_mean", "latency_max", "throughput_rps"):
+        rel = abs(ss[k] - es[k]) / max(abs(es[k]), 1e-12)
+        assert rel < 0.01, f"{k}: streaming {ss[k]} vs exact {es[k]} " \
+                           f"({rel:.2%} > 1%)"
+    assert stream.max_live < n // 2, \
+        f"live requests not bounded: {stream.max_live} of {n}"
+    assert wall < wall_budget_s, f"streaming smoke too slow: {wall:.1f}s"
+    rss = _current_rss_mb()
+    assert rss < rss_budget_mb, f"RSS {rss:.0f}MB over budget"
+    print(f"sim_speed_smoke,OK,n={n},wall={wall:.1f}s,rss={rss:.0f}MB,"
+          f"max_live={stream.max_live},p99_rel_err="
+          f"{abs(ss['latency_p99'] - es['latency_p99']) / es['latency_p99']:.4%}")
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="10k streaming CI smoke (time/RSS/accuracy gate)")
+    ap.add_argument("--scale", action="store_true",
+                    help="10^4-10^6 request streaming scaling curve")
+    ap.add_argument("--counts", type=int, nargs="+",
+                    help="override request counts for --scale")
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke()
+    elif args.scale:
+        run_scaling(tuple(args.counts) if args.counts
+                    else (10_000, 100_000, 1_000_000))
+    else:
+        run()

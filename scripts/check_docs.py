@@ -1,12 +1,18 @@
-"""Docs CI gate: internal markdown links must resolve, and every
-benchmark/example module must carry a docstring.
+"""Docs CI gate: internal markdown links must resolve, every
+benchmark/example module must carry a docstring, and every registered
+policy / workload kind must be documented.
 
 Checks:
   1. every relative link in docs/*.md and README.md points at an
      existing file/directory; ``#anchor`` fragments must match a
      heading slug (GitHub-style) in the target file,
   2. every ``benchmarks/*.py`` and ``examples/*.py`` has a module
-     docstring (they are the runnable documentation of the repo).
+     docstring (they are the runnable documentation of the repo),
+  3. every alias accepted by ``make_global_scheduler`` /
+     ``make_local_scheduler`` and every ``WorkloadSpec.lengths`` /
+     ``WorkloadSpec.arrival`` kind appears as a code-span in
+     docs/POLICIES.md or docs/WORKLOADS.md — new registry entries
+     without docs fail CI (doc-drift guard).
 
 Run:  python scripts/check_docs.py        (exits non-zero on failure)
 """
@@ -19,6 +25,7 @@ import re
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
 
 # [text](target) — excluding images and in-code spans is overkill here;
 # fenced code blocks are stripped before matching
@@ -76,6 +83,36 @@ def check_module_docstrings(pattern: str) -> list:
     return errors
 
 
+def check_registry_docs() -> list:
+    """Every policy alias and workload kind must be documented as a
+    `code span` in docs/POLICIES.md or docs/WORKLOADS.md."""
+    from repro.core.sched.global_sched import GLOBAL_POLICIES
+    from repro.core.sched.local import LOCAL_POLICIES
+    from repro.core.workload import ARRIVAL_KINDS, LENGTH_KINDS
+
+    errors = []
+    text = ""
+    for name in ("POLICIES.md", "WORKLOADS.md"):
+        path = os.path.join(ROOT, "docs", name)
+        if not os.path.exists(path):
+            errors.append(f"docs/{name}: missing (registry doc coverage "
+                          f"needs it)")
+            continue
+        with open(path) as f:
+            text += f.read()
+    groups = [("global policy", sorted(GLOBAL_POLICIES)),
+              ("local policy", sorted(LOCAL_POLICIES)),
+              ("length model", LENGTH_KINDS),
+              ("arrival kind", ARRIVAL_KINDS)]
+    for what, names in groups:
+        for n in names:
+            # accept `name` and the quoted-literal form `"name"`
+            if f"`{n}`" not in text and f'`"{n}"`' not in text:
+                errors.append(f"{what} `{n}` not documented in "
+                              f"docs/POLICIES.md or docs/WORKLOADS.md")
+    return errors
+
+
 def main() -> int:
     errors = []
     docs = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
@@ -85,12 +122,14 @@ def main() -> int:
         errors.extend(check_links(md))
     errors.extend(check_module_docstrings("benchmarks/*.py"))
     errors.extend(check_module_docstrings("examples/*.py"))
+    errors.extend(check_registry_docs())
     for e in errors:
         print(f"docs-check FAIL: {e}")
     if not errors:
         n = len(docs) + 1
         print(f"docs-check OK: {n} markdown files, links + anchors resolve, "
-              f"all benchmarks/examples have module docstrings")
+              f"all benchmarks/examples have module docstrings, all "
+              f"policies/workload kinds documented")
     return 1 if errors else 0
 
 

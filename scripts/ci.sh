@@ -22,3 +22,10 @@ echo "multi-tenant smoke OK"
 echo "== smoke: examples/speculative.py (<30s) =="
 timeout 30 python examples/speculative.py > /dev/null
 echo "speculative-decoding smoke OK"
+
+# outer timeout covers the exact-mode baseline + the streaming run;
+# the benchmark's internal 60s wall budget covers the streaming run only
+echo "== smoke: sim_speed streaming scale gate (10k requests) =="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    timeout 240 python benchmarks/sim_speed.py --smoke
+echo "sim-speed streaming smoke OK"

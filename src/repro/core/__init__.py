@@ -7,8 +7,10 @@ pool) -> comm -> sched (global/local) -> worker -> simulator facade.
 """
 from repro.core.engine import Environment  # noqa: F401
 from repro.core.request import Request, State  # noqa: F401
-from repro.core.workload import WorkloadSpec, generate  # noqa: F401
-from repro.core.metrics import Results, jain_index  # noqa: F401
+from repro.core.workload import (WorkloadSpec, generate,  # noqa: F401
+                                 make_source, make_tenant_source)
+from repro.core.metrics import (Results, StreamingStats,  # noqa: F401
+                                jain_index)
 from repro.core.simulator import (SimSpec, WorkerSpec, FaultSpec,  # noqa: F401
                                   Simulation, simulate)
 from repro.core.specdecode import (AcceptanceModel,  # noqa: F401

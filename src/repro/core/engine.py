@@ -35,13 +35,14 @@ class Event:
 
     def wait(self, cb: Callable[["Event"], None]) -> None:
         """Attach a callback; fires immediately (rescheduled) if already
-        processed — the SimPy semantics processes rely on."""
+        processed — the SimPy semantics processes rely on.  Re-pushing
+        ``self`` (the run loop swaps the callback list out on every pop)
+        keeps the same (time, priority, seq) firing order as scheduling
+        a fresh wrapper event, without allocating one — a measurable win
+        on the million-wait hot path (see docs/PERFORMANCE.md)."""
+        self.callbacks.append(cb)
         if self.processed:
-            ev = Event(self.env)
-            ev.callbacks.append(lambda _e: cb(self))
-            ev.succeed(self._value)
-        else:
-            self.callbacks.append(cb)
+            self.env._schedule(self, 0.0, NORMAL)
 
     @property
     def value(self):

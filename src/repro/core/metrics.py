@@ -1,6 +1,19 @@
 """Metrics: the dynamic outputs the paper argues single-shot simulators
 cannot produce — latency distributions, CDFs, SLO goodput, memory-over-
-time — computed from the per-request records."""
+time — computed from the per-request records.
+
+Two accounting modes share one ``Results`` surface:
+
+* **exact** (default): ``Results.requests`` holds every ``Request`` and
+  percentiles/CDFs are computed from the full latency lists (sorted once
+  and cached per ``Results``);
+* **streaming** (``Results.stats`` set, produced by
+  ``SimSpec(retain_requests=False)``): finished requests are folded into
+  a :class:`StreamingStats` sketch as they retire and then dropped, so
+  memory stays O(1) in the number of requests.  Quantiles come from a
+  log-binned sketch with bounded relative error (default 0.3%, see
+  docs/PERFORMANCE.md for the accuracy model).
+"""
 from __future__ import annotations
 
 import math
@@ -10,10 +23,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.request import Request
 
 
-def percentile(xs: Sequence[float], p: float) -> float:
-    if not xs:
+def _interp_percentile(s: Sequence[float], p: float) -> float:
+    """Linear-interpolated percentile of an already-sorted sequence."""
+    if not s:
         return float("nan")
-    s = sorted(xs)
     k = (len(s) - 1) * p / 100.0
     lo, hi = int(math.floor(k)), int(math.ceil(k))
     if lo == hi:
@@ -21,12 +34,21 @@ def percentile(xs: Sequence[float], p: float) -> float:
     return s[lo] + (s[hi] - s[lo]) * (k - lo)
 
 
-def cdf_points(xs: Sequence[float], n: int = 100) -> List[Tuple[float, float]]:
-    if not xs:
+def percentile(xs: Sequence[float], p: float) -> float:
+    return _interp_percentile(sorted(xs), p)
+
+
+def _cdf_points_sorted(s: Sequence[float],
+                       n: int) -> List[Tuple[float, float]]:
+    """CDF sampled at n+1 evenly spaced fractions of a sorted sequence."""
+    if not s:
         return []
-    s = sorted(xs)
     return [(s[min(len(s) - 1, int(i * len(s) / n))], i / n)
             for i in range(n + 1)]
+
+
+def cdf_points(xs: Sequence[float], n: int = 100) -> List[Tuple[float, float]]:
+    return _cdf_points_sorted(sorted(xs), n)
 
 
 def jain_index(xs: Sequence[float]) -> float:
@@ -38,6 +60,211 @@ def jain_index(xs: Sequence[float]) -> float:
     if sq == 0.0:
         return 1.0
     return sum(xs) ** 2 / (len(xs) * sq)
+
+
+# ---------------------------------------------------------------------------
+# streaming sketches
+# ---------------------------------------------------------------------------
+class QuantileSketch:
+    """Log-binned quantile sketch (DDSketch-style) with bounded relative
+    error: every reported quantile q satisfies |q - q*| <= alpha * q*
+    for the true quantile q*.  Positive values map to geometric buckets
+    ``ceil(log_gamma(x))`` with gamma = (1+alpha)/(1-alpha); bucket
+    count is O(log(max/min)/alpha), independent of sample count."""
+
+    __slots__ = ("gamma", "_lg", "bins", "n_zero", "count",
+                 "sum", "min", "max")
+
+    def __init__(self, alpha: float = 0.003):
+        self.gamma = (1.0 + alpha) / (1.0 - alpha)
+        self._lg = math.log(self.gamma)
+        self.bins: Dict[int, int] = {}
+        self.n_zero = 0                  # values <= 0 collapse to one bin
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def add(self, x: float) -> None:
+        self.count += 1
+        self.sum += x
+        if x < self.min:
+            self.min = x
+        if x > self.max:
+            self.max = x
+        if x <= 0.0:
+            self.n_zero += 1
+            return
+        i = math.ceil(math.log(x) / self._lg)
+        self.bins[i] = self.bins.get(i, 0) + 1
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else float("nan")
+
+    def percentile(self, p: float) -> float:
+        if self.count == 0:
+            return float("nan")
+        if p <= 0.0:
+            return self.min
+        if p >= 100.0:
+            return self.max
+        # nearest-rank target: empirically the closest convention to the
+        # interpolating exact percentile() (floor/ceil bias a half order
+        # statistic, which at the distribution tails costs more than the
+        # sketch's own alpha)
+        rank = round(p / 100.0 * (self.count - 1))
+        if rank < self.n_zero:
+            return min(self.min, 0.0)
+        seen = self.n_zero
+        for i in sorted(self.bins):
+            seen += self.bins[i]
+            if seen > rank:
+                # bucket midpoint in log space: 2γ^i/(γ+1)
+                v = 2.0 * self.gamma ** i / (self.gamma + 1.0)
+                return min(max(v, self.min), self.max)
+        return self.max
+
+    def cdf_points(self, n: int = 100) -> List[Tuple[float, float]]:
+        """Approximate CDF sampled at n+1 evenly spaced fractions —
+        drop-in for ``cdf_points`` on the folded values.  One pass over
+        the sorted bins serves every fraction (percentile() per point
+        would re-sort and re-scan n+1 times)."""
+        if self.count == 0:
+            return []
+        mids = [(seen, 2.0 * self.gamma ** i / (self.gamma + 1.0))
+                for seen, i in self._cumulative_bins()]
+        out: List[Tuple[float, float]] = []
+        j = 0
+        for k in range(n + 1):
+            p = 100.0 * k / n
+            if p <= 0.0:
+                out.append((self.min, 0.0))
+                continue
+            if p >= 100.0:
+                out.append((self.max, 1.0))
+                continue
+            rank = round(p / 100.0 * (self.count - 1))
+            if rank < self.n_zero:
+                out.append((min(self.min, 0.0), k / n))
+                continue
+            while j < len(mids) and mids[j][0] <= rank:
+                j += 1
+            v = mids[j][1] if j < len(mids) else self.max
+            out.append((min(max(v, self.min), self.max), k / n))
+        return out
+
+    def _cumulative_bins(self) -> List[Tuple[int, int]]:
+        """(cumulative count, bin index) in value order, zeros included
+        in the running count."""
+        out = []
+        seen = self.n_zero
+        for i in sorted(self.bins):
+            seen += self.bins[i]
+            out.append((seen, i))
+        return out
+
+    def stats(self) -> Dict[str, float]:
+        return {"p50": self.percentile(50), "p90": self.percentile(90),
+                "p99": self.percentile(99),
+                "max": self.max if self.count else float("nan"),
+                "mean": self.mean}
+
+
+class StreamingStats:
+    """Constant-memory aggregate of retired requests.
+
+    ``Simulation`` folds every finished (or rejected) request in as it
+    retires; ``Results`` reads summaries from here when the request list
+    was not retained.  Counters/min/max/mean are exact; quantiles carry
+    the sketch's bounded relative error.  ``tenant_slos`` maps tenant_id
+    to its (ttft_slo, tpot_slo) so per-tenant SLO attainment can be
+    counted at fold time (once a request is dropped, SLOs cannot be
+    re-evaluated against new thresholds).
+    """
+
+    def __init__(self, alpha: float = 0.003,
+                 slo: Optional[Tuple[float, float]] = None,
+                 tenant_slos: Optional[Dict[str, Tuple[float, float]]] = None):
+        self.alpha = alpha
+        self.slo = slo
+        self.latency = QuantileSketch(alpha)
+        self.norm_latency = QuantileSketch(alpha)
+        self.ttft = QuantileSketch(alpha)
+        self.queue_delay = QuantileSketch(alpha)
+        self.n_finished = 0
+        self.n_rejected = 0
+        self.n_folded = 0
+        self.tokens = 0
+        self.preempts = 0
+        self.n_slo_ok = 0
+        self.first_arrival = math.inf
+        self.last_finish = -math.inf
+        # speculative decoding counters
+        self.spec_steps = 0
+        self.spec_tokens = 0
+        self.draft_proposed = 0
+        self.draft_accepted = 0
+        self._tenant_slos = tenant_slos or {}
+        self.tenants: Dict[str, "StreamingStats"] = {}
+
+    # ------------------------------------------------------------------
+    def _tenant(self, tid: str) -> "StreamingStats":
+        sub = self.tenants.get(tid)
+        if sub is None:
+            sub = StreamingStats(self.alpha,
+                                 slo=self._tenant_slos.get(tid))
+            self.tenants[tid] = sub
+        return sub
+
+    def fold(self, req: Request, *, _recurse: bool = True) -> None:
+        """Fold one retired request (finished or rejected) and forget it."""
+        if _recurse and req.tenant_id is not None:
+            self._tenant(req.tenant_id).fold(req, _recurse=False)
+        self.n_folded += 1
+        self.preempts += req.preempt_count
+        self.spec_steps += req.spec_steps
+        self.spec_tokens += req.spec_tokens
+        self.draft_proposed += req.draft_proposed
+        self.draft_accepted += req.draft_accepted
+        if req.rejected or req.t_finish is None:
+            self.n_rejected += 1
+            return
+        self.n_finished += 1
+        self.tokens += req.tokens_generated
+        if req.arrival_time < self.first_arrival:
+            self.first_arrival = req.arrival_time
+        if req.t_finish > self.last_finish:
+            self.last_finish = req.t_finish
+        self.latency.add(req.latency)
+        self.norm_latency.add(req.normalized_latency)
+        if req.ttft is not None:
+            self.ttft.add(req.ttft)
+        if req.queue_delay is not None:
+            self.queue_delay.add(req.queue_delay)
+        if self.slo is not None and req.meets_slo(*self.slo):
+            self.n_slo_ok += 1
+
+    # ------------------------------------------------------------------
+    @property
+    def span(self) -> float:
+        if self.n_finished == 0:
+            return 0.0
+        return self.last_finish - self.first_arrival
+
+    def throughput(self) -> float:
+        return self.n_finished / max(self.span, 1e-9) \
+            if self.n_finished else 0.0
+
+    def token_throughput(self) -> float:
+        return self.tokens / max(self.span, 1e-9) if self.n_finished else 0.0
+
+    def goodput(self) -> float:
+        """Requests/s that met the configured SLO (needs ``slo`` set at
+        construction: SLOs are evaluated at fold time)."""
+        if self.slo is None or self.n_finished == 0:
+            return float("nan") if self.slo is None else 0.0
+        return self.n_slo_ok / max(self.span, 1e-9)
 
 
 @dataclass
@@ -52,14 +279,37 @@ class Results:
     tenant_specs: Optional[Dict[str, object]] = None
     #: AdmissionController.stats() snapshot at end of sim
     admission_stats: Optional[Dict[str, Dict[str, float]]] = None
+    #: streaming aggregates when the sim ran with retain_requests=False;
+    #: ``requests`` then holds only the (few) never-finished leftovers
+    stats: Optional[StreamingStats] = None
+    #: peak simultaneously-live Request objects (streaming memory model)
+    max_live: int = 0
+    #: per-Results caches: finished list and sorted metric lists are
+    #: computed once (the repeated-full-sort fix); safe because Results
+    #: is read after the simulation has finished mutating requests
+    _cache: Dict[str, list] = field(default_factory=dict, repr=False,
+                                    compare=False)
 
     # ------------------------------------------------------------------
     @property
     def finished(self) -> List[Request]:
-        return [r for r in self.requests if r.t_finish is not None]
+        fin = self._cache.get("finished")
+        if fin is None:
+            fin = [r for r in self.requests if r.t_finish is not None]
+            self._cache["finished"] = fin
+        return fin
+
+    def _sorted(self, name: str, values) -> List[float]:
+        s = self._cache.get(name)
+        if s is None:
+            s = sorted(values)
+            self._cache[name] = s
+        return s
 
     def throughput(self) -> float:
         """Finished requests per second of simulated time."""
+        if self.stats is not None:
+            return self.stats.throughput()
         f = self.finished
         if not f:
             return 0.0
@@ -67,6 +317,8 @@ class Results:
         return len(f) / max(span, 1e-9)
 
     def token_throughput(self) -> float:
+        if self.stats is not None:
+            return self.stats.token_throughput()
         f = self.finished
         if not f:
             return 0.0
@@ -83,18 +335,30 @@ class Results:
         return [r.ttft for r in self.finished if r.ttft is not None]
 
     def latency_stats(self) -> Dict[str, float]:
-        lats = self.latencies()
-        return {"p50": percentile(lats, 50), "p90": percentile(lats, 90),
-                "p99": percentile(lats, 99),
-                "max": max(lats) if lats else float("nan"),
+        if self.stats is not None:
+            return self.stats.latency.stats()
+        lats = self._sorted("latencies", self.latencies())
+        return {"p50": _interp_percentile(lats, 50),
+                "p90": _interp_percentile(lats, 90),
+                "p99": _interp_percentile(lats, 99),
+                "max": lats[-1] if lats else float("nan"),
                 "mean": sum(lats) / len(lats) if lats else float("nan")}
 
     def latency_cdf(self, n: int = 100):
-        return cdf_points(self.latencies(), n)
+        if self.stats is not None:
+            return self.stats.latency.cdf_points(n)
+        return _cdf_points_sorted(
+            self._sorted("latencies", self.latencies()), n)
 
     def slo_goodput(self, *, ttft_slo: float = 0.0,
                     mtpot_slo: float = 0.0) -> float:
-        """Requests/s that met their SLOs (paper's goodput metric)."""
+        """Requests/s that met their SLOs (paper's goodput metric).  In
+        streaming mode SLOs are evaluated at fold time, so this requires
+        the thresholds configured up front (StreamingStats.slo)."""
+        if self.stats is not None:
+            if self.stats.slo == (ttft_slo, mtpot_slo):
+                return self.stats.goodput()
+            return float("nan")
         ok = [r for r in self.finished
               if r.meets_slo(ttft_slo, mtpot_slo)]
         if not ok:
@@ -104,6 +368,11 @@ class Results:
         return len(ok) / max(span, 1e-9)
 
     def preemption_rate(self) -> float:
+        if self.stats is not None:
+            n = self.stats.n_folded + len(self.requests)
+            pre = self.stats.preempts + sum(r.preempt_count
+                                            for r in self.requests)
+            return pre / max(1, n)
         n = len(self.requests)
         return sum(r.preempt_count for r in self.requests) / max(1, n)
 
@@ -113,11 +382,17 @@ class Results:
         draft tokens, effective tokens emitted per verify step (the
         speedup lever: 1.0 means speculation bought nothing), and the
         fraction of tokens produced speculatively."""
-        steps = sum(r.spec_steps for r in self.requests)
-        proposed = sum(r.draft_proposed for r in self.requests)
-        accepted = sum(r.draft_accepted for r in self.requests)
-        spec_tokens = sum(r.spec_tokens for r in self.requests)
-        total_tokens = sum(r.tokens_generated for r in self.requests)
+        if self.stats is not None:
+            steps, proposed = self.stats.spec_steps, self.stats.draft_proposed
+            accepted, spec_tokens = self.stats.draft_accepted, \
+                self.stats.spec_tokens
+            total_tokens = self.stats.tokens
+        else:
+            steps = sum(r.spec_steps for r in self.requests)
+            proposed = sum(r.draft_proposed for r in self.requests)
+            accepted = sum(r.draft_accepted for r in self.requests)
+            spec_tokens = sum(r.spec_tokens for r in self.requests)
+            total_tokens = sum(r.tokens_generated for r in self.requests)
         return {
             "spec_steps": steps,
             "acceptance_rate": accepted / proposed if proposed
@@ -132,6 +407,8 @@ class Results:
     def tenant_ids(self) -> List[str]:
         if self.tenant_specs:
             return sorted(self.tenant_specs)
+        if self.stats is not None:
+            return sorted(self.stats.tenants)
         return sorted({r.tenant_id for r in self.requests
                        if r.tenant_id is not None})
 
@@ -141,11 +418,18 @@ class Results:
         return Results(
             requests=[r for r in self.requests if r.tenant_id == tenant_id],
             sim_time=self.sim_time,
-            tenant_specs=self.tenant_specs)
+            tenant_specs=self.tenant_specs,
+            stats=self.stats.tenants.get(tenant_id)
+            if self.stats is not None else None)
 
     def tenant_token_throughputs(self) -> Dict[str, float]:
         """Generated tokens/s per tenant over the shared finished-span —
         the quantity WFQ shares by weight."""
+        if self.stats is not None:
+            span = self.stats.span
+            return {t: self.stats.tenants[t].tokens / max(span, 1e-9)
+                    if t in self.stats.tenants else 0.0
+                    for t in self.tenant_ids()}
         f = self.finished
         if not f:
             return {t: 0.0 for t in self.tenant_ids()}
@@ -174,6 +458,8 @@ class Results:
         """Per-tenant latency/TTFT percentiles, SLO attainment, goodput,
         rejects and gateway queueing delay.  Per-tenant counters sum to
         the aggregate (property-tested in tests/test_tenancy.py)."""
+        if self.stats is not None:
+            return self._tenant_summary_streaming()
         out: Dict[str, Dict[str, float]] = {}
         tps = self.tenant_token_throughputs()
         for t in self.tenant_ids():
@@ -185,16 +471,18 @@ class Results:
             n_ok = sum(1 for r in fin if r.meets_slo(ttft_slo, tpot_slo))
             qd = [r.queue_delay for r in sub.requests
                   if r.queue_delay is not None]
+            lats = sub._sorted("latencies", sub.latencies())
+            tt = sub._sorted("ttfts", sub.ttfts())
             row = {
                 "n_requests": len(sub.requests),
                 "n_finished": len(fin),
                 "n_rejected": sum(1 for r in sub.requests if r.rejected),
                 "tokens": sum(r.tokens_generated for r in fin),
                 "token_tps": tps.get(t, 0.0),
-                "latency_p50": percentile(sub.latencies(), 50),
-                "latency_p99": percentile(sub.latencies(), 99),
-                "ttft_p50": percentile(sub.ttfts(), 50),
-                "ttft_p99": percentile(sub.ttfts(), 99),
+                "latency_p50": _interp_percentile(lats, 50),
+                "latency_p99": _interp_percentile(lats, 99),
+                "ttft_p50": _interp_percentile(tt, 50),
+                "ttft_p99": _interp_percentile(tt, 99),
                 "queue_delay_mean": sum(qd) / len(qd) if qd
                 else 0.0,
                 "slo_attainment": n_ok / len(sub.requests)
@@ -206,28 +494,67 @@ class Results:
             out[t] = row
         return out
 
+    def _tenant_summary_streaming(self) -> Dict[str, Dict[str, float]]:
+        """tenant_summary from folded per-tenant sketches (drop mode):
+        same keys, span shared with the aggregate so rates compare."""
+        out: Dict[str, Dict[str, float]] = {}
+        span = self.stats.span
+        for t in self.tenant_ids():
+            s = self.stats.tenants.get(t)
+            if s is None:
+                s = StreamingStats(self.stats.alpha)
+            out[t] = {
+                "n_requests": s.n_folded,
+                "n_finished": s.n_finished,
+                "n_rejected": s.n_rejected,
+                "tokens": s.tokens,
+                "token_tps": s.tokens / max(span, 1e-9),
+                "latency_p50": s.latency.percentile(50),
+                "latency_p99": s.latency.percentile(99),
+                "ttft_p50": s.ttft.percentile(50),
+                "ttft_p99": s.ttft.percentile(99),
+                "queue_delay_mean": s.queue_delay.mean
+                if s.queue_delay.count else 0.0,
+                "slo_attainment": s.n_slo_ok / s.n_folded
+                if s.slo is not None and s.n_folded else float("nan"),
+                "goodput_rps": s.n_slo_ok / max(span, 1e-9)
+                if s.slo is not None else float("nan"),
+                "preempt_rate": s.preempts / max(1, s.n_folded),
+            }
+        return out
+
     def summary(self, *, ttft_slo: float = 0.0,
                 mtpot_slo: float = 0.0) -> Dict[str, float]:
+        stats = self.stats
+        n_finished = stats.n_finished if stats is not None \
+            else len(self.finished)
         out = {"throughput_rps": self.throughput(),
                "throughput_tps": self.token_throughput(),
-               "n_finished": len(self.finished),
+               "n_finished": n_finished,
                "preempt_rate": self.preemption_rate(),
                "sim_time": self.sim_time}
         out.update({f"latency_{k}": v
                     for k, v in self.latency_stats().items()})
-        tt = self.ttfts()
-        out["ttft_p50"] = percentile(tt, 50)
-        out["ttft_p99"] = percentile(tt, 99)
+        if stats is not None:
+            out["ttft_p50"] = stats.ttft.percentile(50)
+            out["ttft_p99"] = stats.ttft.percentile(99)
+        else:
+            tt = self._sorted("ttfts", self.ttfts())
+            out["ttft_p50"] = _interp_percentile(tt, 50)
+            out["ttft_p99"] = _interp_percentile(tt, 99)
         if ttft_slo or mtpot_slo:
             out["goodput_rps"] = self.slo_goodput(
                 ttft_slo=ttft_slo, mtpot_slo=mtpot_slo)
         if self.pool_stats:
             out.update({f"pool_{k}": v for k, v in self.pool_stats.items()})
-        if any(r.spec_steps for r in self.requests):
+        has_spec = stats.spec_steps if stats is not None \
+            else any(r.spec_steps for r in self.requests)
+        if has_spec:
             out.update({f"spec_{k}" if not k.startswith("spec_") else k: v
                         for k, v in self.spec_summary().items()})
         if self.tenant_specs:
-            out["n_rejected"] = sum(1 for r in self.requests if r.rejected)
+            out["n_rejected"] = stats.n_rejected if stats is not None \
+                else sum(1 for r in self.requests if r.rejected)
             out["fairness_jain"] = self.fairness_index()
             out["fairness_jain_weighted"] = self.fairness_index(
                 weighted=True)

@@ -17,8 +17,12 @@ class State(enum.Enum):
     REJECTED = "rejected"      # dropped by admission control (429)
 
 
-@dataclass
+@dataclass(eq=False)
 class Request:
+    # eq=False: identity semantics, so hot-path ``in``/``remove`` on
+    # worker queues are pointer comparisons instead of a 25-field
+    # structural compare (which also mis-identifies distinct requests
+    # that happen to share every field value)
     id: int
     arrival_time: float
     prompt_len: int
@@ -49,6 +53,12 @@ class Request:
     draft_proposed: int = 0              # draft tokens proposed (Σ K)
     draft_accepted: int = 0              # draft tokens accepted by target
 
+    # incremental worker-load accounting (core.worker): the exact amount
+    # this request last charged against its worker's waiting/running
+    # load, so dequeue/finish can reverse it in O(1)
+    _load_charge: int = field(default=0, repr=False)
+    _run_charge: int = field(default=0, repr=False)
+
     # timestamps
     t_admitted: Optional[float] = None   # released by admission control
     t_first_token: Optional[float] = None
@@ -72,8 +82,17 @@ class Request:
 
     @property
     def remaining_prefill(self) -> int:
-        return max(0, self.prefill_target
-                   - max(self.cached_len, self.prefill_done_len))
+        # open-coded prefill_target minus max(cached, done): this is the
+        # hottest property in the scheduler loop (called once per running
+        # request per iteration)
+        done = self.prefill_done_len
+        base = self.prompt_len
+        if done < base and self.tokens_generated:
+            base += self.tokens_generated
+        if self.cached_len > done:
+            done = self.cached_len
+        rem = base - done
+        return rem if rem > 0 else 0
 
     @property
     def finished(self) -> bool:

@@ -201,19 +201,23 @@ class PriorityAging(GlobalScheduler):
         return PriorityAgingDiscipline(self.aging_rate)
 
 
+#: every accepted ``SimSpec.global_policy`` name (aliases included);
+#: scripts/check_docs.py asserts each key is documented in docs/POLICIES.md
+GLOBAL_POLICIES = {"round_robin": RoundRobin, "least_loaded": LeastLoaded,
+                   "disagg": DisaggPD, "disagg_pd": DisaggPD,
+                   "session_affinity": SessionAffinity,
+                   "hetero": HeterogeneityAware,
+                   "heterogeneity_aware": HeterogeneityAware,
+                   "wfq": WeightedFairQueuing, "priority": PriorityAging}
+
+
 def make_global_scheduler(kind: str, **kw) -> GlobalScheduler:
     """Build a global policy by name (see docs/POLICIES.md for the full
     reference table).  ``disagg_pd`` and ``heterogeneity_aware`` are
     long-form aliases of ``disagg`` / ``hetero``."""
-    registry = {"round_robin": RoundRobin, "least_loaded": LeastLoaded,
-                "disagg": DisaggPD, "disagg_pd": DisaggPD,
-                "session_affinity": SessionAffinity,
-                "hetero": HeterogeneityAware,
-                "heterogeneity_aware": HeterogeneityAware,
-                "wfq": WeightedFairQueuing, "priority": PriorityAging}
     try:
-        cls = registry[kind]
+        cls = GLOBAL_POLICIES[kind]
     except KeyError:
-        raise ValueError(
-            f"unknown global scheduler {kind!r}; have {sorted(registry)}")
+        raise ValueError(f"unknown global scheduler {kind!r}; "
+                         f"have {sorted(GLOBAL_POLICIES)}")
     return cls(**kw)

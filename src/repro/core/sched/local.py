@@ -10,7 +10,7 @@ running set and memory manager — the full system state, per the paper's
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
 from typing import List, Optional, Tuple
 
 from repro.core.request import Request, State
@@ -150,10 +150,16 @@ class ContinuousBatching(LocalScheduler):
         # MIGRATING requests' KV is in flight to another worker: they
         # stay in ``running`` until the transfer completes but must not
         # be planned (their blocks are released mid-iteration)
-        running = [r for r in worker.running if not r.finished
-                   and r.state is not State.MIGRATING] + plan.admitted
-        prefills = [r for r in running if r.remaining_prefill > 0]
-        decodes = [r for r in running if r.remaining_prefill == 0]
+        # single pass: ``remaining_prefill`` is a non-trivial property,
+        # evaluate it once per request per iteration
+        prefills = []
+        decodes = []
+        for r in worker.running:
+            if r.finished or r.state is State.MIGRATING:
+                continue
+            (prefills if r.remaining_prefill > 0 else decodes).append(r)
+        for r in plan.admitted:
+            (prefills if r.remaining_prefill > 0 else decodes).append(r)
 
         # ---- build the iteration ---------------------------------------
         budget = self.max_batched_tokens
@@ -244,12 +250,17 @@ class ContinuousBatching(LocalScheduler):
             plan.decode = [r for r in plan.decode if r.id not in ids]
 
 
+#: every accepted ``SimSpec.local_policy`` name; scripts/check_docs.py
+#: asserts each key is documented in docs/POLICIES.md
+LOCAL_POLICIES = {"static": StaticBatching, "continuous": ContinuousBatching}
+
+
 def make_local_scheduler(kind: str, **kw) -> LocalScheduler:
-    if kind == "static":
-        return StaticBatching(**{k: v for k, v in kw.items()
-                                 if k in ("max_batch",)})
-    if kind == "continuous":
-        return ContinuousBatching(**{k: v for k, v in kw.items() if k in (
-            "max_batch", "max_batched_tokens", "chunked_prefill",
-            "prefill_chunk")})
-    raise ValueError(f"unknown local scheduler {kind!r}")
+    try:
+        cls = LOCAL_POLICIES[kind]
+    except KeyError:
+        raise ValueError(f"unknown local scheduler {kind!r}; "
+                         f"have {sorted(LOCAL_POLICIES)}")
+    # each policy takes the subset of SimSpec batching knobs it declares
+    allowed = {f.name for f in fields(cls)}
+    return cls(**{k: v for k, v in kw.items() if k in allowed})

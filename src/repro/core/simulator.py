@@ -7,6 +7,13 @@ model prices inter-worker KV movement (disaggregation, Fig. 7); an
 optional memory pool serves multi-round conversations (Fig. 14); fault /
 straggler injection exercises the mitigation policies.
 
+Scale (docs/PERFORMANCE.md): ``SimSpec(streaming=True)`` makes the
+dispatcher pull arrivals lazily from a ``workload.RequestSource``
+instead of materializing the request list, and
+``retain_requests=False`` folds finished requests into constant-memory
+``StreamingStats`` sketches — together they bound live ``Request``
+objects by the in-flight population, enabling million-request runs.
+
 Multi-tenant QoS layer (repro.core.tenancy, beyond paper): when
 ``SimSpec.tenants`` is set, per-tenant workloads are merged into one
 deterministic arrival stream and an ``AdmissionController`` — a
@@ -36,7 +43,7 @@ from repro.core.costmodel.operators import kv_bytes_per_token, \
 from repro.core.engine import Environment
 from repro.core.mem.block_manager import MemoryConfig
 from repro.core.mem.memory_pool import MemoryPool, PoolConfig
-from repro.core.metrics import Results
+from repro.core.metrics import Results, StreamingStats
 from repro.core.request import Request, State
 from repro.core.sched.global_sched import (GlobalScheduler,
                                            make_global_scheduler)
@@ -44,7 +51,8 @@ from repro.core.sched.local import make_local_scheduler
 from repro.core.specdecode import SpecDecodeSpec
 from repro.core.tenancy import AdmissionController, TenantSpec
 from repro.core.worker import Worker
-from repro.core.workload import WorkloadSpec, generate, generate_multi
+from repro.core.workload import (WorkloadSpec, generate, generate_multi,
+                                 make_source, make_tenant_source)
 
 
 @dataclass(frozen=True)
@@ -97,6 +105,23 @@ class SimSpec:
     #: iterations draft ``lookahead`` tokens with the draft model and
     #: verify them in one target forward (continuous batching only)
     spec_decode: Optional[SpecDecodeSpec] = None
+    #: streaming mode (docs/PERFORMANCE.md): the dispatcher pulls
+    #: arrivals lazily from a RequestSource instead of materializing the
+    #: whole request list up front — required for million-request runs.
+    #: With a finite ``until`` horizon, Results.requests covers only the
+    #: requests actually dispatched before the cut (exact mode lists all
+    #: num_requests), so count-normalized metrics can differ there
+    streaming: bool = False
+    #: False folds finished requests into a StreamingStats sketch and
+    #: drops them (Results then reads summaries from ``Results.stats``);
+    #: True (default) keeps the exact per-request list
+    retain_requests: bool = True
+    #: relative quantile error of the streaming sketches
+    sketch_alpha: float = 0.003
+    #: (ttft_slo, tpot_slo) evaluated at fold time so ``slo_goodput``
+    #: works with retain_requests=False (per-tenant SLOs come from the
+    #: tenant tiers automatically)
+    streaming_slo: Optional[tuple] = None
 
 
 class Simulation:
@@ -107,8 +132,27 @@ class Simulation:
         self.env = Environment()
         self.link = comm_mod.Link(self.env, spec.kv_link)
         self.pool = MemoryPool(spec.pool) if spec.pool else None
-        self.requests: List[Request] = generate_multi(spec.tenants) \
-            if spec.tenants else generate(spec.workload)
+        if spec.streaming:
+            # lazy arrival stream: the dispatcher pulls one request at a
+            # time; ``requests`` fills as requests are dispatched (and
+            # stays empty of retired ones when retain_requests=False)
+            self.source = iter(make_tenant_source(spec.tenants)
+                               if spec.tenants
+                               else make_source(spec.workload))
+            self.requests: List[Request] = []
+        else:
+            self.source = None
+            self.requests = generate_multi(spec.tenants) \
+                if spec.tenants else generate(spec.workload)
+        self.stats: Optional[StreamingStats] = None
+        if not spec.retain_requests:
+            tenant_slos = {t.tenant_id: (t.tier.ttft_slo, t.tier.tpot_slo)
+                           for t in spec.tenants}
+            self.stats = StreamingStats(
+                spec.sketch_alpha, slo=spec.streaming_slo,
+                tenant_slos=tenant_slos)
+        self._n_live = 0
+        self.max_live = 0
         self.global_sched: GlobalScheduler = make_global_scheduler(
             spec.global_policy, **spec.global_policy_kw)
         self.admission: Optional[AdmissionController] = \
@@ -196,8 +240,21 @@ class Simulation:
 
     def on_request_finished(self, req: Request) -> None:
         self._n_finished += 1
+        self._n_live -= 1
         if self.admission is not None:
             self.admission.on_finish(req)
+        if self.stats is not None:
+            # fold-and-forget: the request's numbers enter the sketches
+            # and nothing else holds a reference (workers have already
+            # released it), so it is garbage the moment we return
+            self.stats.fold(req)
+
+    def on_request_rejected(self, req: Request) -> None:
+        """Admission control dropped the request (429): account for it
+        so streaming mode can forget it."""
+        self._n_live -= 1
+        if self.stats is not None:
+            self.stats.fold(req)
 
     def redispatch(self, orphans: List[Request]) -> None:
         for req in sorted(orphans, key=lambda r: r.id):
@@ -207,10 +264,18 @@ class Simulation:
     # ------------------------------------------------------------------
     def _dispatcher(self):
         env = self.env
-        for req in self.requests:
+        streaming = self.source is not None
+        retain = self.spec.retain_requests
+        it = self.source if streaming else self.requests
+        for req in it:
+            if streaming and retain:
+                self.requests.append(req)
             delay = req.arrival_time - env.now
             if delay > 0:
                 yield env.timeout(delay)
+            self._n_live += 1
+            if self._n_live > self.max_live:
+                self.max_live = self._n_live
             if self.admission is not None:
                 self.admission.submit(req)
             else:
@@ -243,8 +308,18 @@ class Simulation:
             self.env.process(self._fault_injector(), name="faults")
         self.env.run(until=self.spec.until)
         wall = _time.perf_counter() - t0
+        requests = self.requests
+        if self.stats is not None:
+            # retired requests live only in the sketches; report the
+            # (bounded) leftovers still in flight at the horizon
+            leftovers = {id(r): r for w in self.workers
+                         for r in list(w.waiting) + list(w.running)}
+            if self.admission is not None:
+                for q in self.admission.queues.values():
+                    leftovers.update((id(r), r) for r in q)
+            requests = sorted(leftovers.values(), key=lambda r: r.id)
         return Results(
-            requests=self.requests,
+            requests=requests,
             sim_time=self.env.now,
             worker_mem={w.wid: w.mem_timeline for w in self.workers},
             pool_stats=self.pool.stats() if self.pool else None,
@@ -253,7 +328,9 @@ class Simulation:
             tenant_specs={t.tenant_id: t for t in self.spec.tenants}
             if self.spec.tenants else None,
             admission_stats=self.admission.stats()
-            if self.admission else None)
+            if self.admission else None,
+            stats=self.stats,
+            max_live=self.max_live)
 
 
 def simulate(spec: SimSpec) -> Results:

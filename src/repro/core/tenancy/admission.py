@@ -144,6 +144,9 @@ class AdmissionController:
     def _reject(self, req: Request) -> None:
         req.state = State.REJECTED
         self.rejected[req.tenant_id] += 1
+        on_rejected = getattr(self.cluster, "on_request_rejected", None)
+        if on_rejected is not None:
+            on_rejected(req)
 
     def _release(self, req: Request) -> None:
         req.t_admitted = self.env.now

@@ -22,6 +22,11 @@ from repro.core.request import Request, State
 from repro.core.sched.local import IterationPlan, LocalScheduler
 
 
+#: mem_timeline length at which the sampling stride doubles (bounds the
+#: timeline's memory on long runs; sub-cap runs record every iteration)
+MEM_TIMELINE_CAP = 8192
+
+
 @dataclass
 class MemSample:
     t: float
@@ -65,16 +70,36 @@ class Worker:
         self.alive = True
         self.slowdown = 1.0
         self.mem_timeline: List[MemSample] = []
+        #: decimation stride for mem_timeline: doubled whenever the
+        #: timeline hits MEM_TIMELINE_CAP so memory stays bounded on
+        #: million-iteration runs (runs below the cap are unaffected)
+        self._mem_stride = 1
+        self._mem_tick = 0
+        #: incrementally maintained load_tokens halves; each tracked
+        #: request stores its charge so enqueue/dequeue stay O(1) even
+        #: if its prefill/context state changes while tracked (e.g. a
+        #: pool prefix hit before admission)
+        self._waiting_load = 0
+        self._running_load = 0
         self.iterations = 0
         self.busy_time = 0.0
         self._wake: Optional[Event] = None
         self.proc = env.process(self._run(), name=f"worker{wid}")
 
     # ------------------------------------------------------------------
+    def _enqueue(self, req: Request, *, front: bool = False) -> None:
+        charge = max(1, req.remaining_prefill) + 1
+        req._load_charge = charge
+        self._waiting_load += charge
+        if front:
+            self.waiting.appendleft(req)
+        else:
+            self.waiting.append(req)
+
     def submit(self, req: Request) -> None:
         req.worker_id = self.wid
         req.state = State.WAITING
-        self.waiting.append(req)
+        self._enqueue(req)
         self._wakeup()
 
     def receive_migrated(self, req: Request) -> None:
@@ -83,7 +108,7 @@ class Worker:
         req.worker_id = self.wid
         req.state = State.WAITING
         req.prefill_done_len = req.prefill_target
-        self.waiting.append(req)
+        self._enqueue(req)
         self._wakeup()
 
     def next_waiting(self) -> Optional[Request]:
@@ -96,6 +121,8 @@ class Worker:
 
     def pop_waiting(self, req: Request) -> None:
         self.waiting.remove(req)
+        self._waiting_load -= req._load_charge
+        req._load_charge = 0
 
     def victim_sort_key(self):
         """Ascending sort key such that the END of the sorted running
@@ -105,8 +132,19 @@ class Worker:
         return self.discipline.victim_key(self.env.now)
 
     def load_tokens(self) -> int:
-        return sum(max(1, r.remaining_prefill) + 1 for r in self.waiting) \
-            + sum(1 + r.context_len // 256 for r in self.running)
+        """Dispatch-load heuristic: queued work plus running context
+        pressure, both maintained incrementally so the global
+        scheduler's per-request scan of all workers stays O(1) each."""
+        return self._waiting_load + self._running_load
+
+    def _charge_running(self, req: Request) -> None:
+        c = 1 + req.context_len // 256
+        req._run_charge = c
+        self._running_load += c
+
+    def _uncharge_running(self, req: Request) -> None:
+        self._running_load -= req._run_charge
+        req._run_charge = 0
 
     def _wakeup(self):
         if self._wake is not None and not self._wake.triggered:
@@ -132,6 +170,7 @@ class Worker:
                     State.DECODE
                 if req not in self.running:
                     self.running.append(req)
+                    self._charge_running(req)
                 if self.discipline is not None:
                     self.discipline.on_service_start(req, env.now)
                 self.hooks.fire("on_admit", self, req)
@@ -139,7 +178,8 @@ class Worker:
                 req.state = State.PREEMPTED
                 if req in self.running:
                     self.running.remove(req)
-                self.waiting.appendleft(req)   # retry first (vLLM order)
+                    self._uncharge_running(req)
+                self._enqueue(req, front=True)  # retry first (vLLM order)
 
             # KV must grow before the decode step executes; speculative
             # requests book the whole draft window, the rejected suffix
@@ -182,9 +222,16 @@ class Worker:
             for req in plan.spec_decode:
                 self._apply_spec_step(req, now)
 
-            self.mem_timeline.append(MemSample(
-                now, self.mem.num_used, self.mem.used_bytes(),
-                len(self.running)))
+            self._mem_tick += 1
+            if self._mem_tick % self._mem_stride == 0:
+                self.mem_timeline.append(MemSample(
+                    now, self.mem.num_used, self.mem.used_bytes(),
+                    len(self.running)))
+                if len(self.mem_timeline) >= MEM_TIMELINE_CAP:
+                    # drop odd indices so the t~0 sample survives every
+                    # halving (plots keep their simulation-start anchor)
+                    del self.mem_timeline[1::2]
+                    self._mem_stride *= 2
             self.hooks.fire("after_iteration", self, plan, t)
 
     # ------------------------------------------------------------------
@@ -219,6 +266,10 @@ class Worker:
         first = req.tokens_generated == 0
         req.tokens_generated += 1
         req.token_times.append(now)
+        c = 1 + req.context_len // 256
+        if c != req._run_charge:
+            self._running_load += c - req._run_charge
+            req._run_charge = c
         if first:
             req.t_first_token = now
             self.hooks.fire("on_first_token", self, req)
@@ -234,6 +285,7 @@ class Worker:
         req.t_finish = now
         if req in self.running:
             self.running.remove(req)
+            self._uncharge_running(req)
         self.mem.free(req)
         if self.pool is not None:
             self.pool.store(req.session_id, req.context_len)
@@ -246,8 +298,9 @@ class Worker:
         """Remove a request from this worker (migration/failure)."""
         if req in self.running:
             self.running.remove(req)
+            self._uncharge_running(req)
         if req in self.waiting:
-            self.waiting.remove(req)
+            self.pop_waiting(req)
         self.mem.free(req)
 
     def fail(self) -> List[Request]:
@@ -263,6 +316,8 @@ class Worker:
             r.state = State.QUEUED
         self.running.clear()
         self.waiting.clear()
+        self._waiting_load = 0
+        self._running_load = 0
         return orphans
 
     def recover(self) -> None:

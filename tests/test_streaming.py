@@ -1,0 +1,308 @@
+"""Streaming workloads (RequestSource), sketch metrics (StreamingStats)
+and the retain_requests=False data path — the million-request scale
+contract (docs/PERFORMANCE.md, docs/WORKLOADS.md)."""
+import math
+import random
+
+import pytest
+
+from repro.core.metrics import (QuantileSketch, Results, StreamingStats,
+                                percentile)
+from repro.core.simulator import SimSpec, Simulation, WorkerSpec, simulate
+from repro.core.tenancy import TenantSpec, TenantTier
+from repro.core.workload import (ARRIVAL_KINDS, WorkloadSpec, generate,
+                                 generate_multi, make_source,
+                                 make_tenant_source)
+
+
+def _key(r):
+    return (r.id, r.arrival_time, r.prompt_len, r.output_len,
+            r.session_id, r.round_idx, r.history_len)
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arrival", [k for k in ARRIVAL_KINDS
+                                     if k != "trace"])
+def test_sources_deterministic_and_sorted(arrival):
+    spec = WorkloadSpec(num_requests=1500, qps=20.0, seed=5,
+                        arrival=arrival)
+    a = [_key(r) for r in make_source(spec)]
+    b = [_key(r) for r in make_source(spec)]
+    assert a == b
+    times = [k[1] for k in a]
+    assert times == sorted(times)
+    assert [k[0] for k in a] == list(range(len(a)))   # dense stable ids
+
+
+def test_stream_matches_seed_golden_sample():
+    """Backward-compat pin: these tuples were produced by the
+    pre-streaming list-based generate() (verified against git history),
+    so stream/generate regressions cannot cancel out — the comparison
+    is against frozen data, not against the same code path."""
+    golden = [
+        (0, 0.204012, 35, 38, 1, 0),
+        (1, 0.64947, 32, 216, 2, 0),
+        (2, 0.859368, 121, 461, 3, 0),
+        (3, 1.187161, 184, 160, 4, 0),
+        (4, 1.563272, 276, 481, 5, 0),
+        (5, 1.658407, 185, 869, 6, 0),
+    ]
+    spec = WorkloadSpec(num_requests=6, qps=5.0, seed=42)
+    got = [(r.id, round(r.arrival_time, 6), r.prompt_len, r.output_len,
+            r.session_id, r.round_idx) for r in make_source(spec)]
+    assert got == golden
+    assert [(r.id, round(r.arrival_time, 6), r.prompt_len, r.output_len,
+             r.session_id, r.round_idx) for r in generate(spec)] == golden
+
+
+def test_stream_matches_generate():
+    """The lazy source and the materializing wrapper are the same
+    stream, including multi-round sessions re-entering via the pending
+    heap and the qps=0 all-at-once corner."""
+    for spec in (WorkloadSpec(num_requests=400, qps=6.0, seed=11,
+                              multi_round_frac=0.4),
+                 WorkloadSpec(num_requests=200, qps=0.0, seed=1,
+                              multi_round_frac=0.3),
+                 WorkloadSpec(num_requests=300, qps=9.0, seed=2,
+                              lengths="fixed", prompt_len=32,
+                              output_len=8)):
+        assert [_key(r) for r in make_source(spec)] == \
+            [_key(r) for r in generate(spec)]
+
+
+def test_bursty_is_burstier_than_poisson():
+    """MMPP on-off should fatten the interarrival dispersion (CV > 1)
+    relative to Poisson (CV ~ 1) at the same mean rate."""
+    def cv(arrival):
+        spec = WorkloadSpec(num_requests=6000, qps=50.0, seed=3,
+                            arrival=arrival, burst_on_scale=4.0,
+                            burst_off_scale=0.1)
+        ts = [r.arrival_time for r in make_source(spec)]
+        gaps = [b - a for a, b in zip(ts, ts[1:])]
+        mean = sum(gaps) / len(gaps)
+        var = sum((g - mean) ** 2 for g in gaps) / len(gaps)
+        return math.sqrt(var) / mean
+    assert cv("bursty") > 1.3 * cv("poisson")
+
+
+def test_diurnal_rate_modulation():
+    """Arrivals concentrate in the sinusoid's high-rate half-period."""
+    spec = WorkloadSpec(num_requests=8000, qps=50.0, seed=4,
+                        arrival="diurnal", diurnal_period=100.0,
+                        diurnal_amplitude=0.9)
+    reqs = list(make_source(spec))
+    # phase in [0, 1): first half-period is the high-rate half
+    high = sum(1 for r in reqs
+               if (r.arrival_time % 100.0) < 50.0)
+    assert high / len(reqs) > 0.6
+
+
+def test_trace_streaming_rejects_unsorted(tmp_path):
+    p = tmp_path / "t.jsonl"
+    p.write_text('{"arrival": 5.0, "prompt_len": 8, "output_len": 2}\n'
+                 '{"arrival": 1.0, "prompt_len": 8, "output_len": 2}\n')
+    spec = WorkloadSpec(num_requests=10, lengths="trace",
+                        trace_path=str(p))
+    with pytest.raises(ValueError):
+        list(make_source(spec))
+    assert len(generate(spec)) == 2          # list mode sorts instead
+
+
+def test_tenant_merge_accepts_unsorted_trace(tmp_path):
+    """Trace-backed tenants are materialized-and-sorted inside the
+    merge (pre-streaming generate_multi behaviour), so unsorted traces
+    on disk keep working in multi-tenant mode."""
+    p = tmp_path / "t.jsonl"
+    p.write_text('{"arrival": 2.0, "prompt_len": 8, "output_len": 2}\n'
+                 '{"arrival": 1.0, "prompt_len": 4, "output_len": 2}\n'
+                 '{"arrival": 3.0, "prompt_len": 2, "output_len": 2}\n')
+    tenants = [TenantSpec("t0", TenantTier(),
+                          WorkloadSpec(num_requests=10, lengths="trace",
+                                       trace_path=str(p)))]
+    merged = generate_multi(tenants)
+    assert [r.arrival_time for r in merged] == [1.0, 2.0, 3.0]
+    assert [r.prompt_len for r in merged] == [4, 8, 2]
+    assert [_key(r) for r in merged] == \
+        [_key(r) for r in make_tenant_source(tenants)]
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant heap-merge
+# ---------------------------------------------------------------------------
+def _tenants():
+    return [
+        TenantSpec("acme", TenantTier(name="pro", priority=5, weight=4.0),
+                   WorkloadSpec(num_requests=300, qps=5.0, seed=2,
+                                multi_round_frac=0.3)),
+        TenantSpec("beta", TenantTier(name="free"),
+                   WorkloadSpec(num_requests=200, qps=3.0, seed=2,
+                                arrival="bursty")),
+    ]
+
+
+def test_tenant_merge_matches_generate_multi():
+    a = [(_key(r), r.tenant_id, r.priority, r.weight)
+         for r in make_tenant_source(_tenants())]
+    b = [(_key(r), r.tenant_id, r.priority, r.weight)
+         for r in generate_multi(_tenants())]
+    assert a == b
+
+
+def test_tenant_merge_preserves_per_tenant_order_and_ids():
+    merged = list(make_tenant_source(_tenants()))
+    assert [r.id for r in merged] == list(range(len(merged)))
+    times = [r.arrival_time for r in merged]
+    assert times == sorted(times)
+    for tid in ("acme", "beta"):
+        sub = [r for r in merged if r.tenant_id == tid]
+        # per-tenant arrival order survives the merge, and so does the
+        # per-tenant stream itself (same requests as solo generation)
+        solo = make_tenant_source([t for t in _tenants()
+                                   if t.tenant_id == tid])
+        assert [(r.arrival_time, r.prompt_len, r.output_len)
+                for r in sub] == \
+            [(r.arrival_time, r.prompt_len, r.output_len) for r in solo]
+
+
+# ---------------------------------------------------------------------------
+# sketches
+# ---------------------------------------------------------------------------
+def test_sketch_within_1pct_on_lognormal():
+    rng = random.Random(0)
+    xs = [rng.lognormvariate(0.0, 1.0) for _ in range(10_000)]
+    sk = QuantileSketch()
+    for x in xs:
+        sk.add(x)
+    for p in (1, 10, 25, 50, 75, 90, 99, 99.9):
+        exact = percentile(xs, p)
+        assert abs(sk.percentile(p) - exact) / exact < 0.01, p
+    assert sk.count == len(xs)
+    assert sk.max == max(xs) and sk.min == min(xs)
+    assert abs(sk.mean - sum(xs) / len(xs)) < 1e-9
+
+
+def test_sketch_edge_cases():
+    sk = QuantileSketch()
+    assert math.isnan(sk.percentile(50))
+    sk.add(0.0)
+    sk.add(5.0)
+    assert sk.percentile(0) == 0.0
+    assert sk.percentile(100) == 5.0
+    cdf = sk.cdf_points(4)
+    assert cdf[0][1] == 0.0 and cdf[-1][1] == 1.0
+
+
+def test_sketch_cdf_matches_percentiles():
+    """The single-pass CDF equals evaluating percentile() pointwise."""
+    rng = random.Random(1)
+    sk = QuantileSketch()
+    for _ in range(5000):
+        sk.add(rng.lognormvariate(0.0, 1.0))
+    assert sk.cdf_points(50) == \
+        [(sk.percentile(100.0 * i / 50), i / 50) for i in range(51)]
+
+
+# ---------------------------------------------------------------------------
+# retain_requests=False end-to-end
+# ---------------------------------------------------------------------------
+def _base(streaming, retain, **kw):
+    return SimSpec(
+        arch="llama2-7b", workers=[WorkerSpec(), WorkerSpec()],
+        workload=WorkloadSpec(num_requests=400, qps=30.0, seed=4),
+        max_batch=64, streaming=streaming, retain_requests=retain, **kw)
+
+
+def test_streaming_mode_identical_to_materialized():
+    r1 = simulate(_base(False, True))
+    r2 = simulate(_base(True, True))
+    assert [x.t_finish for x in r1.requests] == \
+        [x.t_finish for x in r2.requests]
+
+
+def test_drop_mode_matches_exact_summary():
+    exact = simulate(_base(False, True)).summary()
+    drop_res = simulate(_base(True, False))
+    drop = drop_res.summary()
+    assert not drop_res.requests                 # everything retired
+    assert drop_res.stats is not None
+    assert drop["n_finished"] == exact["n_finished"]
+    for k, v in exact.items():
+        if isinstance(v, float) and v == v and v != 0.0:
+            assert abs(drop[k] - v) / abs(v) < 0.011, (k, v, drop[k])
+
+
+def test_drop_mode_bounds_live_requests():
+    res = simulate(_base(True, False))
+    assert 0 < res.max_live < 400
+
+
+def test_drop_mode_tenant_breakdown():
+    tenants = [
+        TenantSpec("acme", TenantTier(name="pro", weight=4.0,
+                                      ttft_slo=5.0, tpot_slo=1.0),
+                   WorkloadSpec(num_requests=150, qps=10.0, seed=1)),
+        TenantSpec("beta", TenantTier(name="free"),
+                   WorkloadSpec(num_requests=100, qps=6.0, seed=1)),
+    ]
+    def spec(streaming, retain):
+        return SimSpec(arch="llama2-7b",
+                       workers=[WorkerSpec(), WorkerSpec()],
+                       tenants=tenants, global_policy="wfq",
+                       streaming=streaming, retain_requests=retain)
+    exact = simulate(spec(False, True))
+    drop = simulate(spec(True, False))
+    es, ds = exact.tenant_summary(), drop.tenant_summary()
+    assert set(es) == set(ds) == {"acme", "beta"}
+    for t in es:
+        for k in ("n_requests", "n_finished", "n_rejected", "tokens"):
+            assert ds[t][k] == es[t][k], (t, k)
+        for k in ("latency_p50", "latency_p99", "token_tps"):
+            assert abs(ds[t][k] - es[t][k]) / max(es[t][k], 1e-12) < 0.011
+    assert abs(drop.fairness_index() - exact.fairness_index()) < 0.01
+    # per-tenant folds sum to the aggregate
+    st = drop.stats
+    assert sum(s.n_folded for s in st.tenants.values()) == st.n_folded
+
+
+def test_streaming_goodput_with_configured_slo():
+    slo = (0.5, 0.5)
+    exact = simulate(_base(False, True))
+    drop = simulate(_base(True, False, streaming_slo=slo))
+    g_exact = exact.slo_goodput(ttft_slo=slo[0], mtpot_slo=slo[1])
+    g_drop = drop.slo_goodput(ttft_slo=slo[0], mtpot_slo=slo[1])
+    assert abs(g_drop - g_exact) / max(g_exact, 1e-12) < 1e-6
+    # unmatched thresholds cannot be answered post-hoc in drop mode
+    assert math.isnan(drop.slo_goodput(ttft_slo=9.9))
+
+
+# ---------------------------------------------------------------------------
+# Results caching regression (the repeated-full-sort fix)
+# ---------------------------------------------------------------------------
+def test_results_summary_unchanged_by_sort_cache():
+    res = simulate(_base(False, True))
+    s = res.summary()
+    lats = res.latencies()
+    tt = res.ttfts()
+    assert s["latency_p50"] == percentile(lats, 50)
+    assert s["latency_p90"] == percentile(lats, 90)
+    assert s["latency_p99"] == percentile(lats, 99)
+    assert s["ttft_p50"] == percentile(tt, 50)
+    assert s["ttft_p99"] == percentile(tt, 99)
+    assert s["latency_max"] == max(lats)
+    # repeated calls hit the cache and stay identical
+    assert res.summary() == s
+    assert res.latency_cdf(10) == res.latency_cdf(10)
+
+
+def test_mem_timeline_stays_bounded():
+    from repro.core.worker import MEM_TIMELINE_CAP
+    res = simulate(SimSpec(
+        arch="llama2-7b", workers=[WorkerSpec()],
+        workload=WorkloadSpec(num_requests=200, qps=0.0, seed=0,
+                              lengths="fixed", prompt_len=4,
+                              output_len=64),
+        max_batch=4))
+    for tl in res.worker_mem.values():
+        assert len(tl) <= MEM_TIMELINE_CAP
