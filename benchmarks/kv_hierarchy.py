@@ -1,0 +1,190 @@
+"""Hierarchical KV memory study (docs/MEMORY.md): the swap-vs-recompute
+preemption crossover and shared-prefix copy-on-write capacity gains.
+
+Two experiments:
+
+1. **Preemption-mode crossover** — a memory-starved A100 worker under
+   backlog, sweeping context length x PCIe bandwidth x
+   ``preemption_mode``.  Swap wins where the PCIe round trip undercuts
+   re-prefill compute (long contexts, fast links); recompute wins for
+   short contexts on slow links, where scattered per-block DMA overhead
+   and low transfer efficiency dominate.  Preemptions are rare but
+   catastrophic at long context (each one forfeits a whole-context
+   re-prefill) and frequent but cheap at short context — the sweep
+   reports end-to-end throughput, so both frequency and unit cost count.
+
+2. **Shared-prefix capacity** — a shared-1k-token-system-prompt
+   workload on a small-memory worker; prefix sharing stores the system
+   prompt's KV once instead of per request, raising the max concurrent
+   batch (the effective capacity) by >= 1.5x.
+
+``--smoke`` runs the CI gates instead (scripts/ci.sh): (a) swap mode
+must not deadlock at ~95% memory pressure — every request finishes even
+when the device is nearly full and victims cycle through host DRAM; and
+(b) with no overlapping prefixes, prefix sharing must be a no-op —
+results byte-identical to a non-sharing run.
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.configs import get_config
+from repro.core.costmodel.operators import kv_bytes_per_token
+from repro.core.simulator import SimSpec, WorkerSpec, simulate
+from repro.core.workload import WorkloadSpec, generate
+
+from benchmarks.common import Bench, fmt
+
+KVT = kv_bytes_per_token(get_config("llama2-7b"), 2)  # ~0.52 MB/token
+
+CTXS = (64, 256, 1024, 2048)
+PCIE = (4e9, 16e9, 64e9)
+#: the corners the crossover assertion uses; --quick sweeps only these
+QUICK_CTXS = (64, 2048)
+QUICK_PCIE = (4e9, 64e9)
+
+
+def _pressure_spec(ctx: int, pcie: float, mode: str, *, n: int = 48,
+                   out: int = 256, slots: int = 12) -> SimSpec:
+    """A worker whose KV pool holds ~``slots`` prompts of ``ctx`` tokens
+    plus a few outputs of decode headroom: admission over-commits, so
+    decode growth preempts continuously."""
+    kv_budget = (slots * ctx + 4 * out) * KVT
+    cap = (13.5e9 + kv_budget) / 0.9      # params + KV at 0.9 util
+    wl = WorkloadSpec(num_requests=n, qps=0.0, seed=0, lengths="fixed",
+                      prompt_len=ctx, output_len=out)
+    return SimSpec(
+        arch="llama2-7b",
+        workers=[WorkerSpec(hw="A100", mem_cap_override=cap,
+                            hw_overrides={"pcie_bw": pcie})],
+        workload=wl, preemption_mode=mode)
+
+
+def run_crossover(b: Bench, ctxs=CTXS, pcies=PCIE) -> dict:
+    grid = {}
+    for ctx in ctxs:
+        for pcie in pcies:
+            tput = {}
+            for mode in ("recompute", "swap"):
+                res = simulate(_pressure_spec(ctx, pcie, mode))
+                m = res.memory_summary()
+                tput[mode] = res.throughput()
+                b.add(exp="crossover", ctx=ctx, pcie_gbps=pcie / 1e9,
+                      mode=mode, throughput=fmt(res.throughput()),
+                      p99=fmt(res.latency_stats()["p99"]),
+                      preempts=m["preempts"],
+                      swap_preempts=m["swap_preempts"],
+                      swap_gb=fmt(m.get("swap_bytes_out", 0.0) / 1e9, 2))
+            grid[(ctx, pcie)] = tput["swap"] / tput["recompute"]
+            print(f"ctx={ctx:5d} pcie={pcie/1e9:4.0f}GB/s  "
+                  f"swap/recompute throughput = {grid[(ctx, pcie)]:.3f}  "
+                  f"-> {'swap' if grid[(ctx, pcie)] > 1 else 'recompute'}")
+    # the classic crossover: swap wins at long context / fast PCIe,
+    # recompute wins at short context on a slow link
+    long_fast = grid[(max(ctxs), max(pcies))]
+    short_slow = grid[(min(ctxs), min(pcies))]
+    assert long_fast > 1.0, \
+        f"swap should win at long ctx/fast PCIe: {long_fast}"
+    assert short_slow < 1.0, \
+        f"recompute should win at short ctx/slow PCIe: {short_slow}"
+    return grid
+
+
+def _capacity_spec(share: bool, *, n: int = 64, prefix: int = 1000,
+                   private: int = 64, out: int = 64) -> SimSpec:
+    # pool sized to ~12 full (non-shared) requests
+    kv_budget = 12 * (prefix + private + out) * KVT
+    cap = (13.5e9 + kv_budget) / 0.9
+    wl = WorkloadSpec(num_requests=n, qps=0.0, seed=0, lengths="fixed",
+                      prompt_len=private, output_len=out,
+                      shared_prefix_len=prefix, shared_prefix_groups=1)
+    return SimSpec(
+        arch="llama2-7b",
+        workers=[WorkerSpec(hw="A100", mem_cap_override=cap)],
+        workload=wl, prefix_sharing=share)
+
+
+def run_capacity() -> float:
+    b = Bench("kv_hierarchy_capacity")
+    batch = {}
+    for share in (False, True):
+        res = simulate(_capacity_spec(share))
+        batch[share] = max(s.n_running for s in res.worker_mem[0])
+        m = res.memory_summary()
+        b.add(sharing=int(share), max_batch=batch[share],
+              throughput=fmt(res.throughput()),
+              p99=fmt(res.latency_stats()["p99"]),
+              shared_tokens=m["shared_tokens"],
+              prefix_hit_rate=fmt(m["prefix_hit_rate"], 3))
+    gain = batch[True] / batch[False]
+    print(f"max concurrent batch: shared={batch[True]} "
+          f"unshared={batch[False]}  gain={gain:.2f}x")
+    assert gain >= 1.5, f"prefix sharing capacity gain {gain:.2f}x < 1.5x"
+    b.finish(derived=f"prefix_capacity={gain:.2f}x")
+    return gain
+
+
+# ---------------------------------------------------------------------------
+def smoke_no_deadlock() -> None:
+    """Swap mode at ~95% device-memory pressure must drain the workload
+    (victims cycle device -> host -> device without wedging)."""
+    spec = _pressure_spec(256, 16e9, "swap", n=64, out=256, slots=6)
+    res = simulate(spec)
+    assert len(res.finished) == 64, \
+        f"swap mode deadlocked: {len(res.finished)}/64 finished"
+    nb = res.mem_stats[0]["num_blocks"]
+    peak = max(s.used_blocks for s in res.worker_mem[0])
+    assert peak / nb >= 0.9, f"pressure too low to be a gate: {peak}/{nb}"
+    m = res.memory_summary()
+    assert m["swap_preempts"] > 0, "no swaps exercised"
+    print(f"no-deadlock OK: 64/64 finished at "
+          f"{100 * peak / nb:.0f}% peak pressure, "
+          f"{m['swap_preempts']} swap preemptions")
+
+
+def smoke_sharing_noop() -> None:
+    """With no overlapping prefixes, prefix sharing must change nothing:
+    per-request timings byte-identical to a non-sharing run."""
+    wl = WorkloadSpec(num_requests=100, qps=20.0, seed=11,
+                      shared_prefix_len=256,
+                      shared_prefix_groups=1_000_000)
+    ids = [r.prefix_id for r in generate(wl)]
+    assert len(set(ids)) == len(ids), "seed 11 produced overlapping prefixes"
+    outs = []
+    for share in (False, True):
+        res = simulate(SimSpec(
+            arch="llama2-7b",
+            workers=[WorkerSpec(hw="A100", gpu_mem_util=0.3)],
+            workload=wl, prefix_sharing=share))
+        outs.append([(r.id, r.t_first_token, r.t_finish)
+                     for r in res.requests])
+    assert outs[0] == outs[1], "sharing changed a non-overlapping workload"
+    print("sharing-noop OK: 100 disjoint-prefix requests byte-identical")
+
+
+def run(quick: bool = False) -> dict:
+    """Driver entry point (benchmarks/run.py): crossover sweep +
+    capacity study; ``quick`` restricts the sweep to the asserted
+    corner configurations."""
+    b = Bench("kv_hierarchy")
+    grid = run_crossover(b, ctxs=QUICK_CTXS if quick else CTXS,
+                         pcies=QUICK_PCIE if quick else PCIE)
+    best = max(grid.values())
+    worst = min(grid.values())
+    b.finish(derived=f"swap_best={best:.3f}x_recompute_best="
+                     f"{1 / worst:.3f}x")
+    gain = run_capacity()
+    return {"grid": grid, "capacity_gain": gain}
+
+
+def main(argv) -> int:
+    if "--smoke" in argv:
+        smoke_no_deadlock()
+        smoke_sharing_noop()
+        return 0
+    run(quick="--quick" in argv)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

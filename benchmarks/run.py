@@ -20,9 +20,9 @@ def main(argv=None):
     q = args.quick
 
     from benchmarks import (batching, disagg_ratio, disagg_validation,
-                            hardware_sub, mem_footprint, memcache, memratio,
-                            platform_sweep, sim_speed, spec_decode,
-                            tenant_qos, validation)
+                            hardware_sub, kv_hierarchy, mem_footprint,
+                            memcache, memratio, platform_sweep, sim_speed,
+                            spec_decode, tenant_qos, validation)
 
     benches = [
         ("validation", lambda: validation.run(n_req=20 if q else 40)),
@@ -41,6 +41,7 @@ def main(argv=None):
             n_req=200 if q else 800)),
         ("tenant_qos", lambda: tenant_qos.run(quick=q)),
         ("spec_decode", lambda: spec_decode.run(quick=q)),
+        ("kv_hierarchy", lambda: kv_hierarchy.run(quick=q)),
     ]
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

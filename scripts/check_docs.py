@@ -12,7 +12,10 @@ Checks:
      ``make_local_scheduler`` and every ``WorkloadSpec.lengths`` /
      ``WorkloadSpec.arrival`` kind appears as a code-span in
      docs/POLICIES.md or docs/WORKLOADS.md — new registry entries
-     without docs fail CI (doc-drift guard).
+     without docs fail CI (doc-drift guard),
+  4. every ``SimSpec.preemption_mode``, every pool eviction policy and
+     every ``HARDWARE`` entry appears as a code-span in docs/MEMORY.md
+     (same doc-drift guard for the memory subsystem).
 
 Run:  python scripts/check_docs.py        (exits non-zero on failure)
 """
@@ -113,6 +116,31 @@ def check_registry_docs() -> list:
     return errors
 
 
+def check_memory_docs() -> list:
+    """Every preemption mode, pool eviction policy and HARDWARE entry
+    must be documented as a `code span` in docs/MEMORY.md."""
+    from repro.core.costmodel.hardware import HARDWARE
+    from repro.core.mem.memory_pool import EVICTION_KINDS
+    from repro.core.mem.swap import PREEMPTION_MODES
+
+    errors = []
+    path = os.path.join(ROOT, "docs", "MEMORY.md")
+    if not os.path.exists(path):
+        return ["docs/MEMORY.md: missing (memory-registry doc coverage "
+                "needs it)"]
+    with open(path) as f:
+        text = f.read()
+    groups = [("preemption mode", sorted(PREEMPTION_MODES)),
+              ("pool eviction policy", sorted(EVICTION_KINDS)),
+              ("HARDWARE entry", sorted(HARDWARE))]
+    for what, names in groups:
+        for n in names:
+            if f"`{n}`" not in text and f'`"{n}"`' not in text:
+                errors.append(f"{what} `{n}` not documented in "
+                              f"docs/MEMORY.md")
+    return errors
+
+
 def main() -> int:
     errors = []
     docs = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
@@ -123,13 +151,14 @@ def main() -> int:
     errors.extend(check_module_docstrings("benchmarks/*.py"))
     errors.extend(check_module_docstrings("examples/*.py"))
     errors.extend(check_registry_docs())
+    errors.extend(check_memory_docs())
     for e in errors:
         print(f"docs-check FAIL: {e}")
     if not errors:
         n = len(docs) + 1
         print(f"docs-check OK: {n} markdown files, links + anchors resolve, "
               f"all benchmarks/examples have module docstrings, all "
-              f"policies/workload kinds documented")
+              f"policies/workload kinds and memory registries documented")
     return 1 if errors else 0
 
 

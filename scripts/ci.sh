@@ -29,3 +29,11 @@ echo "== smoke: sim_speed streaming scale gate (10k requests) =="
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     timeout 240 python benchmarks/sim_speed.py --smoke
 echo "sim-speed streaming smoke OK"
+
+# (a) swap preemption must drain a 95%-memory-pressure workload without
+# deadlocking; (b) prefix sharing must be byte-identical to non-shared
+# when no prefixes overlap (docs/MEMORY.md)
+echo "== smoke: kv_hierarchy memory gates =="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    timeout 120 python benchmarks/kv_hierarchy.py --smoke
+echo "kv-hierarchy smoke OK"

@@ -6,6 +6,9 @@ Layers (bottom-up): engine (DES kernel) -> request/workload -> costmodel
 pool) -> comm -> sched (global/local) -> worker -> simulator facade.
 """
 from repro.core.engine import Environment  # noqa: F401
+from repro.core.mem import (BlockManager, MemoryConfig,  # noqa: F401
+                            MemoryPool, PoolConfig, SwapConfig,
+                            SwapManager)
 from repro.core.request import Request, State  # noqa: F401
 from repro.core.workload import (WorkloadSpec, generate,  # noqa: F401
                                  make_source, make_tenant_source)

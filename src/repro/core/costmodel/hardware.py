@@ -21,6 +21,9 @@ class HardwareSpec:
     mem_cap: float          # HBM bytes
     link_bw: float          # inter-device bytes/s (NVLink / ICI per link)
     pcie_bw: float = 32e9   # host link bytes/s
+    #: host DRAM bytes available to park swapped-out KV (the SwapManager
+    #: tier, docs/MEMORY.md); the per-accelerator share of the host box
+    host_mem_cap: float = 256e9
     price: float = 1.0      # relative to A100
     # achievable fractions (empirical efficiency of dense kernels):
     flops_eff: float = 0.62
@@ -38,20 +41,25 @@ A100_40G = A100.with_(name="A100-40G", mem_cap=40e9)
 #: the paper's "AL" — A100 with 1/4 peak FLOPS (Fig. 12)
 A100_LOW = A100.with_(name="A100-low", flops=312e12 / 4, price=0.9)
 V100 = HardwareSpec("V100", flops=125e12, mem_bw=0.9e12, mem_cap=32e9,
-                    link_bw=150e9, price=0.25)
+                    link_bw=150e9, pcie_bw=16e9, host_mem_cap=96e9,
+                    price=0.25)
 #: SK Hynix GDDR6-AiM accelerator card (paper's "G"): near-bank compute
 #: gives GDDR6 an effective ~16x internal bandwidth for GEMV-like decode
 #: ops. Modeled from the Hot Chips '34 figures at card level; the paper
 #: prices it at ~1/2 an A100.
 G6_AIM = HardwareSpec("G6-AiM", flops=26e12, mem_bw=2.0e12, mem_cap=32e9,
-                      link_bw=32e9, price=0.5)
+                      link_bw=32e9, pcie_bw=16e9, host_mem_cap=64e9,
+                      price=0.5)
 #: TPU v5e — the deployment target for the real runtime in this repo.
 TPU_V5E = HardwareSpec("TPUv5e", flops=197e12, mem_bw=819e9, mem_cap=16e9,
-                       link_bw=50e9, price=0.35)
+                       link_bw=50e9, pcie_bw=16e9, host_mem_cap=128e9,
+                       price=0.35)
 #: CPU host executing the real JAX engine in this container; calibrated
-#: via TabularBackend, the static numbers are only a seed.
+#: via TabularBackend, the static numbers are only a seed.  KV "swap"
+#: target is its own DRAM, so pcie_bw degrades to a memcpy.
 CPU_HOST = HardwareSpec("CPU", flops=2e11, mem_bw=40e9, mem_cap=32e9,
-                        link_bw=10e9, price=0.02, flops_eff=0.5, bw_eff=0.5,
+                        link_bw=10e9, pcie_bw=20e9, host_mem_cap=32e9,
+                        price=0.02, flops_eff=0.5, bw_eff=0.5,
                         iter_overhead=1e-3)
 
 HARDWARE = {h.name: h for h in

@@ -1,2 +1,17 @@
-from repro.core.mem.block_manager import BlockManager, MemoryConfig  # noqa: F401
-from repro.core.mem.memory_pool import MemoryPool, PoolConfig  # noqa: F401
+"""Hierarchical KV memory management (paper §III-B / §IV-E,
+docs/MEMORY.md).
+
+Three tiers, device-out: ``BlockManager`` — paged device KV with
+refcounted shared-prefix copy-on-write blocks; ``SwapManager`` — host
+DRAM holding preempted requests' KV over a PCIe-costed channel
+(``SimSpec.preemption_mode="swap"``); ``MemoryPool`` + ``PrefixTrie`` —
+the cross-request/session cache serving multi-round conversations and
+prefix locality.
+"""
+from repro.core.mem.block_manager import (BlockManager,  # noqa: F401
+                                          MemoryConfig)
+from repro.core.mem.memory_pool import (EVICTION_KINDS,  # noqa: F401
+                                        MemoryPool, PoolConfig,
+                                        PrefixTrie)
+from repro.core.mem.swap import (PREEMPTION_MODES,  # noqa: F401
+                                 SwapConfig, SwapManager)

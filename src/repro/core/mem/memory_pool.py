@@ -1,11 +1,14 @@
-"""Multi-round KV memory pool and prompt-prefix trie.
+"""Multi-round KV memory pool and prompt-prefix trie (docs/MEMORY.md).
 
 Citations: CachedAttention / MemServe (paper §IV-E, Fig. 14).
 
 Finished conversations park their KV in a tiered pool (host DRAM or a
 disaggregated memory pool); a follow-up round of the same session reuses
 the cached prefix instead of recomputing prefill.  A prompt-prefix trie
-gives MemServe-style cross-request locality for identical prefixes.
+gives MemServe-style cross-request locality for identical prefixes —
+both for global-scheduler routing (worker payloads) and inside the
+``BlockManager`` allocation path (physical-block payloads backing
+shared-prefix copy-on-write caching).
 
 Costs: retrieval latency per block (MemServe quotes ~800 ns/block for
 pooled memory) plus optional bandwidth-limited transfer handled by the
@@ -15,9 +18,13 @@ from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.request import Request
+
+#: every accepted ``PoolConfig.eviction`` policy; scripts/check_docs.py
+#: asserts each entry is documented in docs/MEMORY.md
+EVICTION_KINDS = ("lru",)
 
 
 @dataclass(frozen=True)
@@ -26,6 +33,7 @@ class PoolConfig:
     block_size: int = 16
     retrieve_latency_per_block: float = 800e-9   # MemServe figure
     store_latency_per_block: float = 800e-9
+    eviction: str = "lru"                # see EVICTION_KINDS
     enabled: bool = True
 
 
@@ -33,6 +41,9 @@ class MemoryPool:
     """LRU pool of per-session KV prefixes (token granularity)."""
 
     def __init__(self, pc: PoolConfig):
+        if pc.eviction not in EVICTION_KINDS:
+            raise ValueError(f"unknown pool eviction policy "
+                             f"{pc.eviction!r}; have {EVICTION_KINDS}")
         self.pc = pc
         self._entries: "OrderedDict[int, int]" = OrderedDict()
         self.used_tokens = 0
@@ -90,13 +101,26 @@ class PrefixTrie:
     """MemServe-style global prompt tree at block granularity.
 
     Keys are per-block content hashes (here: the workload's deterministic
-    pseudo-token blocks); used by the session-affinity global scheduler to
-    route requests to the worker most likely to hold their prefix."""
+    pseudo-token block keys).  Two payload kinds share the node
+    structure, serving the two prefix-locality layers of the stack:
+
+    * ``_workers`` sets — the session-affinity global scheduler routes
+      requests to the worker most likely to hold their prefix
+      (``insert`` / ``best_worker``);
+    * ``_block`` physical-block ids — the ``BlockManager`` allocation
+      path resolves a request's shared-prefix keys to resident device
+      blocks for refcounted copy-on-write sharing (``insert_block`` /
+      ``match_blocks`` / ``remove_block``).
+    """
+
+    #: node payload keys (everything else in a node dict is a child edge)
+    _META = ("_workers", "_block")
 
     def __init__(self, block_size: int = 16):
         self.block_size = block_size
         self.root: Dict = {}
 
+    # -- worker-routing payloads (global scheduler) ----------------------
     def insert(self, key_blocks: Tuple[int, ...], worker_id: int) -> None:
         node = self.root
         for kb in key_blocks:
@@ -116,3 +140,44 @@ class PrefixTrie:
         if not last_workers:
             return None, 0
         return min(last_workers), depth
+
+    # -- physical-block payloads (BlockManager allocation path) ----------
+    def insert_block(self, key_path: Sequence, block_id: int) -> None:
+        """Register a resident device block under its content-key path."""
+        node = self.root
+        for k in key_path:
+            node = node.setdefault(k, {})
+        node["_block"] = block_id
+
+    def match_blocks(self, key_path: Sequence) -> List[int]:
+        """Physical blocks of the longest registered prefix of
+        ``key_path`` (contiguous from the root; stops at the first key
+        without a resident block)."""
+        node = self.root
+        out: List[int] = []
+        for k in key_path:
+            node = node.get(k)
+            if node is None or "_block" not in node:
+                break
+            out.append(node["_block"])
+        return out
+
+    def remove_block(self, key_path: Sequence) -> None:
+        """Unregister the block at ``key_path``, pruning nodes that hold
+        no live payload and no children afterwards."""
+        path = [self.root]
+        for k in key_path:
+            nxt = path[-1].get(k)
+            if nxt is None:
+                return
+            path.append(nxt)
+        path[-1].pop("_block", None)
+        for i in range(len(key_path), 0, -1):
+            node = path[i]
+            # presence checks, not truthiness: block id 0 and physical
+            # worker id 0 are live payloads too
+            alive = any(k not in self._META for k in node) \
+                or "_block" in node or node.get("_workers")
+            if alive:                    # child edges or live payloads
+                break
+            del path[i - 1][key_path[i - 1]]

@@ -1,0 +1,132 @@
+"""Host-DRAM swap tier for preempted KV (docs/MEMORY.md).
+
+Citations: vLLM's swap preemption mode and the LLMServingSim /
+Miao et al. serving-survey treatment of KV offload across a memory
+hierarchy.  When a local scheduler preempts a request in
+``preemption_mode="swap"``, the victim's resident KV moves to host DRAM
+over a PCIe-bandwidth-costed channel instead of being discarded; on
+re-admission it moves back and decoding resumes without re-prefill.
+
+Cost model (billed into the worker's iteration time by the event loop):
+
+    transfer_time(tokens) = setup_latency
+                          + blocks * per_block_latency
+                          + tokens * kv_bytes_per_token / pcie_bw
+
+The per-block term models the scattered per-layer DMA descriptors a
+paged KV layout forces (small non-contiguous copies run far below peak
+PCIe bandwidth), which is why recompute beats swap for short contexts
+while swap wins for long ones — the crossover
+``benchmarks/kv_hierarchy.py`` sweeps.  Host capacity is bounded by
+``HardwareSpec.host_mem_cap``; when the host tier is full the scheduler
+falls back to recompute preemption for that victim.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.core.request import Request
+
+#: every accepted ``SimSpec.preemption_mode``; scripts/check_docs.py
+#: asserts each entry is documented in docs/MEMORY.md
+PREEMPTION_MODES = ("recompute", "swap")
+
+
+@dataclass(frozen=True)
+class SwapConfig:
+    pcie_bw: float = 32e9               # host link bytes/s
+    host_capacity_bytes: float = 256e9  # DRAM reserved for swapped KV
+    kv_bytes_per_token: float = 1.0     # 0 => SSM constant per-seq state
+    state_bytes_per_seq: float = 0.0
+    block_size: int = 16
+    #: fixed DMA/driver setup per transfer, seconds
+    setup_latency: float = 50e-6
+    #: per-block descriptor cost of scattered paged-KV copies, seconds
+    per_block_latency: float = 50e-6
+
+
+class SwapManager:
+    """Accounting for KV parked in host DRAM, one instance per worker.
+
+    Holds (req id -> tokens) for swapped-out requests, bounds host
+    usage, and prices each direction of the transfer.  Pure accounting:
+    the local scheduler decides *when* to swap, the worker bills the
+    returned latencies into simulated time.
+    """
+
+    def __init__(self, sc: SwapConfig):
+        self.sc = sc
+        self.host: Dict[int, int] = {}   # req id -> tokens held in DRAM
+        self.used_bytes = 0.0
+        self.peak_used_bytes = 0.0
+        self.swap_out_events = 0
+        self.swap_in_events = 0
+        self.bytes_out = 0.0
+        self.bytes_in = 0.0
+        self.fallbacks = 0               # host full: recompute instead
+
+    # -- cost model -------------------------------------------------------
+    def bytes_for(self, tokens: int) -> float:
+        if self.sc.kv_bytes_per_token > 0:
+            return tokens * self.sc.kv_bytes_per_token
+        return self.sc.state_bytes_per_seq
+
+    def transfer_time(self, tokens: int) -> float:
+        """One direction (swap-out or swap-in) of ``tokens`` of KV."""
+        blocks = max(1, math.ceil(max(1, tokens) / self.sc.block_size))
+        return self.sc.setup_latency \
+            + blocks * self.sc.per_block_latency \
+            + self.bytes_for(tokens) / max(self.sc.pcie_bw, 1.0)
+
+    # -- state ------------------------------------------------------------
+    def can_swap_out(self, tokens: int) -> bool:
+        return self.used_bytes + self.bytes_for(tokens) \
+            <= self.sc.host_capacity_bytes
+
+    def holds(self, req: Request) -> bool:
+        return req.id in self.host
+
+    def tokens_held(self, req: Request) -> int:
+        return self.host.get(req.id, 0)
+
+    def swap_out(self, req: Request, tokens: int) -> float:
+        """Park ``tokens`` of req's KV in host DRAM; returns latency."""
+        assert req.id not in self.host, f"req {req.id} already swapped"
+        assert tokens > 0
+        nbytes = self.bytes_for(tokens)
+        assert self.used_bytes + nbytes <= self.sc.host_capacity_bytes, \
+            "host tier full (call can_swap_out first)"
+        self.host[req.id] = tokens
+        self.used_bytes += nbytes
+        self.peak_used_bytes = max(self.peak_used_bytes, self.used_bytes)
+        self.swap_out_events += 1
+        self.bytes_out += nbytes
+        return self.transfer_time(tokens)
+
+    def swap_in(self, req: Request) -> float:
+        """Restore req's KV to the device; returns latency."""
+        tokens = self.host.pop(req.id)
+        nbytes = self.bytes_for(tokens)
+        self.used_bytes -= nbytes
+        self.swap_in_events += 1
+        self.bytes_in += nbytes
+        return self.transfer_time(tokens)
+
+    def drop(self, req: Request) -> int:
+        """Discard req's host copy without a transfer (finish, failure,
+        migration); idempotent.  Returns tokens released."""
+        tokens = self.host.pop(req.id, 0)
+        if tokens:
+            self.used_bytes -= self.bytes_for(tokens)
+        return tokens
+
+    def stats(self) -> Dict[str, float]:
+        return {"swap_out_events": self.swap_out_events,
+                "swap_in_events": self.swap_in_events,
+                "bytes_out": self.bytes_out,
+                "bytes_in": self.bytes_in,
+                "used_bytes": self.used_bytes,
+                "peak_used_bytes": self.peak_used_bytes,
+                "fallbacks": self.fallbacks}

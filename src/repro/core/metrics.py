@@ -205,6 +205,12 @@ class StreamingStats:
         self.spec_tokens = 0
         self.draft_proposed = 0
         self.draft_accepted = 0
+        # hierarchical KV memory counters (docs/MEMORY.md): folded here
+        # so retain_requests=False keeps swap/prefix accounting exact
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.shared_tokens = 0
+        self.cow_copies = 0
         self._tenant_slos = tenant_slos or {}
         self.tenants: Dict[str, "StreamingStats"] = {}
 
@@ -227,6 +233,10 @@ class StreamingStats:
         self.spec_tokens += req.spec_tokens
         self.draft_proposed += req.draft_proposed
         self.draft_accepted += req.draft_accepted
+        self.swap_outs += req.swap_out_count
+        self.swap_ins += req.swap_in_count
+        self.shared_tokens += req.shared_tokens
+        self.cow_copies += req.cow_copies
         if req.rejected or req.t_finish is None:
             self.n_rejected += 1
             return
@@ -273,6 +283,10 @@ class Results:
     sim_time: float
     worker_mem: Dict[int, list] = field(default_factory=dict)
     pool_stats: Optional[dict] = None
+    #: per-worker BlockManager.stats() (prefix sharing / occupancy)
+    mem_stats: Optional[Dict[int, dict]] = None
+    #: per-worker SwapManager.stats() when preemption_mode="swap"
+    swap_stats: Optional[Dict[int, dict]] = None
     wall_time: float = 0.0
     events: int = 0
     #: tenant_id -> TenantSpec when the sim ran with tenants (tenancy)
@@ -375,6 +389,51 @@ class Results:
             return pre / max(1, n)
         n = len(self.requests)
         return sum(r.preempt_count for r in self.requests) / max(1, n)
+
+    # ---- hierarchical KV memory (repro.core.mem) ----------------------
+    def memory_summary(self) -> Dict[str, float]:
+        """Hierarchical-memory accounting (docs/MEMORY.md): the
+        preemption-mode breakdown (how many evictions swapped vs
+        recomputed), PCIe swap volume, and prefix-sharing/copy-on-write
+        activity.  Works in both exact and streaming modes — leftover
+        in-flight requests are added to the folded counters."""
+        if self.stats is not None:
+            preempts = self.stats.preempts + sum(
+                r.preempt_count for r in self.requests)
+            swap_outs = self.stats.swap_outs + sum(
+                r.swap_out_count for r in self.requests)
+            swap_ins = self.stats.swap_ins + sum(
+                r.swap_in_count for r in self.requests)
+            shared_tokens = self.stats.shared_tokens + sum(
+                r.shared_tokens for r in self.requests)
+            cow = self.stats.cow_copies + sum(
+                r.cow_copies for r in self.requests)
+        else:
+            preempts = sum(r.preempt_count for r in self.requests)
+            swap_outs = sum(r.swap_out_count for r in self.requests)
+            swap_ins = sum(r.swap_in_count for r in self.requests)
+            shared_tokens = sum(r.shared_tokens for r in self.requests)
+            cow = sum(r.cow_copies for r in self.requests)
+        out = {"preempts": preempts,
+               "swap_preempts": swap_outs,
+               "recompute_preempts": preempts - swap_outs,
+               "swap_ins": swap_ins,
+               "shared_tokens": shared_tokens,
+               "cow_copies": cow}
+        if self.swap_stats:
+            vals = self.swap_stats.values()
+            out["swap_bytes_out"] = sum(s["bytes_out"] for s in vals)
+            out["swap_bytes_in"] = sum(s["bytes_in"] for s in vals)
+            out["host_peak_bytes"] = max(
+                s["peak_used_bytes"] for s in vals)
+            out["swap_fallbacks"] = sum(s["fallbacks"] for s in vals)
+        if self.mem_stats:
+            hits = sum(s["shared_hits"] for s in self.mem_stats.values())
+            misses = sum(s["shared_misses"]
+                         for s in self.mem_stats.values())
+            out["prefix_hit_rate"] = hits / (hits + misses) \
+                if hits + misses else 0.0
+        return out
 
     # ---- speculative decoding (repro.core.specdecode) -----------------
     def spec_summary(self) -> Dict[str, float]:
@@ -547,6 +606,14 @@ class Results:
                 ttft_slo=ttft_slo, mtpot_slo=mtpot_slo)
         if self.pool_stats:
             out.update({f"pool_{k}": v for k, v in self.pool_stats.items()})
+        if self.swap_stats or (self.mem_stats and any(
+                s["shared_hits"] + s["shared_misses"]
+                for s in self.mem_stats.values())):
+            mem = self.memory_summary()
+            for k in ("swap_preempts", "recompute_preempts",
+                      "swap_bytes_out", "prefix_hit_rate", "cow_copies"):
+                if k in mem:
+                    out[k] = mem[k]
         has_spec = stats.spec_steps if stats is not None \
             else any(r.spec_steps for r in self.requests)
         if has_spec:

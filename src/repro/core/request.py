@@ -39,6 +39,12 @@ class Request:
     weight: float = 1.0                  # WFQ share
     vft: float = 0.0                     # virtual finish time (WFQ tag)
 
+    # hierarchical KV memory (repro.core.mem, docs/MEMORY.md): requests
+    # with the same prefix_id share their first prefix_len prompt tokens
+    # (a system prompt); the BlockManager content-keys those blocks
+    prefix_id: Optional[int] = None
+    prefix_len: int = 0
+
     # runtime state
     state: State = State.QUEUED
     tokens_generated: int = 0
@@ -52,6 +58,13 @@ class Request:
     spec_tokens: int = 0                 # tokens emitted by spec steps
     draft_proposed: int = 0              # draft tokens proposed (Σ K)
     draft_accepted: int = 0              # draft tokens accepted by target
+
+    # hierarchical KV memory counters (docs/MEMORY.md)
+    shared_tokens: int = 0               # tokens backed by shared blocks
+    cow_copies: int = 0                  # copy-on-write block copies
+    swapped_tokens: int = 0              # KV tokens parked in host DRAM
+    swap_out_count: int = 0              # preemptions taken in swap mode
+    swap_in_count: int = 0               # host->device restores
 
     # incremental worker-load accounting (core.worker): the exact amount
     # this request last charged against its worker's waiting/running

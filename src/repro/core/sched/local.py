@@ -27,10 +27,18 @@ class IterationPlan:
     admitted: List[Request] = field(default_factory=list)
     preempted: List[Request] = field(default_factory=list)
     retrieve_latency: float = 0.0        # memory-pool fetches this iter
+    #: PCIe time of this iteration's KV swap-outs/-ins (docs/MEMORY.md);
+    #: billed serially into the iteration by the worker
+    swap_latency: float = 0.0
 
     @property
     def empty(self) -> bool:
-        return not (self.prefill or self.decode or self.spec_decode)
+        # preempted counts as work: the worker must still apply the
+        # eviction side effects (state change, re-enqueue) even when a
+        # full-eviction cascade leaves nothing to compute — otherwise
+        # victims strand in ``running`` with their KV already freed
+        return not (self.prefill or self.decode or self.spec_decode
+                    or self.preempted)
 
 
 class LocalScheduler:
@@ -63,6 +71,32 @@ def _victim_sort_key(worker):
     return f() if f is not None else (lambda r: (r.arrival_time, r.id))
 
 
+def _preempt(worker, victim: Request, plan: IterationPlan) -> None:
+    """Evict ``victim``'s KV from the device.  In swap mode
+    (``worker.swap`` set) the KV parks in host DRAM over the PCIe
+    channel and prefill progress survives; when the host tier is full —
+    or in recompute mode — the KV is discarded and the victim
+    re-prefills on re-admission.  The swap covers the full resident
+    context, vLLM-style (no dedup against prefix blocks other holders
+    keep resident — see docs/MEMORY.md), so a swapped victim can always
+    be restored regardless of what its prefix sharers do meanwhile."""
+    mem = worker.mem
+    tokens = mem.resident_tokens(victim)
+    mem.free(victim)
+    swap = getattr(worker, "swap", None)
+    if swap is not None and tokens > 0 and swap.can_swap_out(tokens):
+        plan.swap_latency += swap.swap_out(victim, tokens)
+        victim.swapped_tokens = tokens
+        victim.swap_out_count += 1
+    else:
+        if swap is not None:
+            swap.fallbacks += 1
+        victim.prefill_done_len = 0
+        victim.cached_len = 0
+    victim.preempt_count += 1
+    plan.preempted.append(victim)
+
+
 def _prefill_sort_key(worker):
     """Order competing prefills inside one iteration: FIFO by default,
     discipline order (priority / virtual finish time) when the worker
@@ -91,7 +125,7 @@ class StaticBatching(LocalScheduler):
                 req = _next_waiting(worker)
                 ctx = max(1, req.context_len)
                 if not worker.mem.can_allocate(
-                        ctx, headroom_tokens=req.output_len):
+                        ctx, headroom_tokens=req.output_len, req=req):
                     break
                 _pop_waiting(worker, req)
                 worker.mem.allocate(req, ctx, reserve=req.output_len)
@@ -119,7 +153,9 @@ class ContinuousBatching(LocalScheduler):
     * prefill-prioritized iterations (vLLM v0) unless ``chunked_prefill``
       mixes one prefill chunk with running decodes (Sarathi-style —
       beyond-paper option),
-    * preempts the newest running request on decode OOM (recompute mode).
+    * preempts the newest running request on decode OOM — discarding its
+      KV (recompute mode) or parking it in host DRAM when the worker
+      carries a ``SwapManager`` (swap mode, docs/MEMORY.md).
     """
 
     max_batch: int = 256
@@ -131,20 +167,28 @@ class ContinuousBatching(LocalScheduler):
         plan = IterationPlan()
         mem = worker.mem
 
-        # ---- admission ------------------------------------------------
+        # ---- admission (swap-aware: see docs/MEMORY.md) ----------------
+        swap = getattr(worker, "swap", None)
         n_running = len(worker.running)
         while worker.waiting and n_running + len(plan.admitted) < self.max_batch:
             req = _next_waiting(worker)
             need = max(1, req.context_len)
-            if req.cached_len == 0 and worker.pool is not None \
-                    and req.history_len > 0:
+            swapped = swap is not None and swap.holds(req)
+            if req.cached_len == 0 and not swapped \
+                    and worker.pool is not None and req.history_len > 0:
                 reuse, lat = worker.pool.lookup(req)
                 req.cached_len = reuse
                 plan.retrieve_latency = max(plan.retrieve_latency, lat)
-            if not mem.can_allocate(need, respect_watermark=True):
+            if not mem.can_allocate(need, respect_watermark=True, req=req):
                 break
             _pop_waiting(worker, req)
             mem.allocate(req, need)
+            if swapped:
+                # restore the parked KV before the step; decode resumes
+                # where it left off (no re-prefill)
+                plan.swap_latency += swap.swap_in(req)
+                req.swap_in_count += 1
+                req.swapped_tokens = 0
             plan.admitted.append(req)
 
         # MIGRATING requests' KV is in flight to another worker: they
@@ -187,26 +231,24 @@ class ContinuousBatching(LocalScheduler):
         # Victim order comes from the worker's queue discipline: FIFO
         # evicts the newest arrival (seed behaviour); tenant-aware
         # disciplines evict the lowest tier / least-entitled first, so
-        # low-tier requests yield KV blocks to high-tier ones.
+        # low-tier requests yield KV blocks to high-tier ones.  The
+        # eviction itself follows the worker's preemption mode: swap to
+        # host DRAM when a SwapManager is attached (falling back to
+        # recompute if the host tier is full), discard otherwise.
         decodes.sort(key=_victim_sort_key(worker))
         survivors: List[Request] = list(decodes)
 
-        # check appends feasible; evict newest until they are
+        # check appends feasible (incl. copy-on-write copies of shared
+        # prefix blocks); evict newest until they are
         def total_new_blocks(reqs):
-            return sum(
-                mem.blocks_needed(mem.resident_tokens(r) + 1)
-                - len(mem.block_table(r)) for r in reqs
-                if mem.resident(r))
+            return sum(mem.growth_blocks(r, 1) for r in reqs
+                       if mem.resident(r))
 
         while survivors and total_new_blocks(survivors) > mem.num_free:
             victim = survivors.pop()       # newest arrival
             if victim in plan.admitted:
                 plan.admitted.remove(victim)
-            mem.free(victim)
-            victim.prefill_done_len = 0
-            victim.cached_len = 0
-            victim.preempt_count += 1
-            plan.preempted.append(victim)
+            _preempt(worker, victim, plan)
         plan.decode = survivors
         self._assign_speculative(worker, plan)
         return plan
@@ -227,18 +269,18 @@ class ContinuousBatching(LocalScheduler):
         k1 = spec_cfg.verify_tokens
         budget = self.max_batched_tokens \
             - sum(c for _, c, _ in plan.prefill) - len(plan.decode)
-        # blocks already committed to the +1 growth of every planned decode
-        committed = sum(
-            mem.blocks_needed(mem.resident_tokens(r) + 1)
-            - len(mem.block_table(r))
-            for r in plan.decode if mem.resident(r))
+        # blocks already committed to the +1 growth of every planned
+        # decode (growth_blocks includes any copy-on-write copy)
+        committed = sum(mem.growth_blocks(r, 1)
+                        for r in plan.decode if mem.resident(r))
         free = mem.num_free - committed
         chosen = []
         for r in plan.decode:              # already in discipline order
             if budget < k1 - 1:
                 break
-            res = mem.resident_tokens(r) if mem.resident(r) else 0
-            extra = mem.blocks_needed(res + k1) - mem.blocks_needed(res + 1)
+            if not mem.resident(r):
+                continue
+            extra = mem.growth_blocks(r, k1) - mem.growth_blocks(r, 1)
             if extra > free:
                 continue
             free -= extra

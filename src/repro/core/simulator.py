@@ -7,6 +7,14 @@ model prices inter-worker KV movement (disaggregation, Fig. 7); an
 optional memory pool serves multi-round conversations (Fig. 14); fault /
 straggler injection exercises the mitigation policies.
 
+Hierarchical KV memory (docs/MEMORY.md): ``preemption_mode="swap"``
+attaches a per-worker host-DRAM ``SwapManager`` so preemption parks
+victim KV over PCIe instead of recomputing it, and
+``prefix_sharing=True`` makes the ``BlockManager`` share content-keyed
+prefix blocks between concurrent requests with refcounted
+copy-on-write — both costed against ``HardwareSpec.pcie_bw`` /
+``host_mem_cap``.
+
 Scale (docs/PERFORMANCE.md): ``SimSpec(streaming=True)`` makes the
 dispatcher pull arrivals lazily from a ``workload.RequestSource``
 instead of materializing the request list, and
@@ -43,6 +51,7 @@ from repro.core.costmodel.operators import kv_bytes_per_token, \
 from repro.core.engine import Environment
 from repro.core.mem.block_manager import MemoryConfig
 from repro.core.mem.memory_pool import MemoryPool, PoolConfig
+from repro.core.mem.swap import PREEMPTION_MODES, SwapConfig, SwapManager
 from repro.core.metrics import Results, StreamingStats
 from repro.core.request import Request, State
 from repro.core.sched.global_sched import (GlobalScheduler,
@@ -90,6 +99,16 @@ class SimSpec:
     prefill_chunk: int = 512
     block_size: int = 16
     dtype_bytes: int = 2
+    #: preemption mode (docs/MEMORY.md): "recompute" discards a victim's
+    #: KV and re-prefills it on re-admission; "swap" parks it in host
+    #: DRAM over the worker's PCIe link and restores it later
+    preemption_mode: str = "recompute"
+    #: shared-prefix copy-on-write caching in the BlockManager: requests
+    #: with equal (prefix_id, prefix_len) share resident prefix blocks
+    prefix_sharing: bool = False
+    #: host DRAM bytes available for swapped KV; None = the worker
+    #: hardware's ``HardwareSpec.host_mem_cap``
+    host_mem_cap: Optional[float] = None
     pool: Optional[PoolConfig] = None
     kv_link: comm_mod.LinkSpec = comm_mod.NVLINK
     faults: Sequence[FaultSpec] = ()
@@ -168,6 +187,10 @@ class Simulation:
     # ------------------------------------------------------------------
     def _build_workers(self) -> None:
         spec = self.spec
+        if spec.preemption_mode not in PREEMPTION_MODES:
+            raise ValueError(f"unknown preemption_mode "
+                             f"{spec.preemption_mode!r}; have "
+                             f"{PREEMPTION_MODES}")
         disagg = any(w.role != "both" for w in spec.workers)
         draft_cfg = None
         if spec.spec_decode is not None:
@@ -183,7 +206,17 @@ class Simulation:
                 self.cfg, hw.mem_cap, block_size=spec.block_size,
                 dtype_bytes=spec.dtype_bytes, tp=ws.tp,
                 gpu_mem_util=ws.gpu_mem_util,
-                watermark=max(0.0, 1.0 - ws.max_mem_ratio))
+                watermark=max(0.0, 1.0 - ws.max_mem_ratio),
+                prefix_sharing=spec.prefix_sharing)
+            swap = None
+            if spec.preemption_mode == "swap":
+                swap = SwapManager(SwapConfig(
+                    pcie_bw=hw.pcie_bw,
+                    host_capacity_bytes=spec.host_mem_cap
+                    if spec.host_mem_cap is not None else hw.host_mem_cap,
+                    kv_bytes_per_token=mem_cfg.kv_bytes_per_token,
+                    state_bytes_per_seq=mem_cfg.state_bytes_per_seq,
+                    block_size=mem_cfg.block_size))
             if spec.backends_by_worker and i in spec.backends_by_worker:
                 backend = spec.backends_by_worker[i]
             elif spec.backend == "tabular":
@@ -214,7 +247,7 @@ class Simulation:
                        enc_tokens_per_req=enc_tokens,
                        discipline=self.global_sched.discipline(),
                        spec_decode=spec.spec_decode,
-                       draft_backend=draft_backend)
+                       draft_backend=draft_backend, swap=swap)
             w.slowdown = ws.slowdown
             self.workers.append(w)
 
@@ -323,6 +356,9 @@ class Simulation:
             sim_time=self.env.now,
             worker_mem={w.wid: w.mem_timeline for w in self.workers},
             pool_stats=self.pool.stats() if self.pool else None,
+            mem_stats={w.wid: w.mem.stats() for w in self.workers},
+            swap_stats={w.wid: w.swap.stats() for w in self.workers
+                        if w.swap is not None} or None,
             wall_time=wall,
             events=sum(w.iterations for w in self.workers),
             tenant_specs={t.tenant_id: t for t in self.spec.tenants}

@@ -18,6 +18,7 @@ from repro.core.costmodel.operators import BatchMix
 from repro.core.engine import Environment, Event
 from repro.core.mem.block_manager import BlockManager, MemoryConfig
 from repro.core.mem.memory_pool import MemoryPool
+from repro.core.mem.swap import SwapManager
 from repro.core.request import Request, State
 from repro.core.sched.local import IterationPlan, LocalScheduler
 
@@ -44,7 +45,8 @@ class Worker:
                  hooks: Optional[Hooks] = None,
                  enc_tokens_per_req: int = 0,
                  discipline=None, spec_decode=None,
-                 draft_backend: Optional[CostBackend] = None):
+                 draft_backend: Optional[CostBackend] = None,
+                 swap: Optional[SwapManager] = None):
         self.env = env
         self.wid = wid
         self.hw = hw
@@ -62,6 +64,9 @@ class Worker:
         #: speculative decoding (repro.core.specdecode); None = disabled
         self.spec_decode = spec_decode
         self.draft_backend = draft_backend
+        #: host-DRAM KV tier (repro.core.mem.swap); when set, preemption
+        #: swaps victims' KV out over PCIe instead of discarding it
+        self.swap = swap
         self._spec_rng = spec_decode.rng_for_worker(wid) \
             if spec_decode is not None else None
 
@@ -201,8 +206,10 @@ class Worker:
                 enc_tokens=self.enc_tokens_per_req * sum(
                     1 for r, c, b in plan.prefill
                     if b == 0))
+            # swap transfers are PCIe-bound, not compute: they bill at
+            # face value rather than scaling with the worker slowdown
             t = self.backend.iteration_time(mix) * self.slowdown \
-                + plan.retrieve_latency
+                + plan.retrieve_latency + plan.swap_latency
             if plan.spec_decode:
                 t += self._draft_time(plan.spec_decode) * self.slowdown
             yield env.timeout(t)
@@ -302,6 +309,11 @@ class Worker:
         if req in self.waiting:
             self.pop_waiting(req)
         self.mem.free(req)
+        if self.swap is not None and self.swap.drop(req):
+            # host copy is gone with the worker binding: re-prefill
+            req.swapped_tokens = 0
+            req.prefill_done_len = 0
+            req.cached_len = 0
 
     def fail(self) -> List[Request]:
         """Kill the worker; returns requests needing re-dispatch."""
@@ -309,7 +321,10 @@ class Worker:
         orphans = list(self.running) + list(self.waiting)
         for r in orphans:
             self.mem.free(r)
-            # restart from scratch (KV lost)
+            if self.swap is not None:
+                self.swap.drop(r)
+            # restart from scratch (device and host KV lost)
+            r.swapped_tokens = 0
             r.prefill_done_len = 0
             r.cached_len = 0
             r.preempt_count += 1

@@ -82,6 +82,14 @@ class WorkloadSpec:
     rounds_max: int = 7
     think_time_mean: float = 2.0
 
+    # shared-prefix workloads (docs/MEMORY.md): every session carries a
+    # common system prompt of ``shared_prefix_len`` tokens (added to its
+    # first-round prompt) drawn from one of ``shared_prefix_groups``
+    # distinct prefixes; requests expose it as (prefix_id, prefix_len)
+    # so a prefix-sharing BlockManager can share the resident blocks
+    shared_prefix_len: int = 0
+    shared_prefix_groups: int = 1
+
 
 def _sample_len(rng: random.Random, spec: WorkloadSpec, which: str) -> int:
     if spec.lengths == "fixed":
@@ -209,17 +217,26 @@ class SyntheticSource(RequestSource):
                     and rng.random() < spec.multi_round_frac:
                 n_rounds = rng.randint(spec.rounds_min, spec.rounds_max)
             sid += 1
+            prefix_id = None
+            if spec.shared_prefix_len > 0:
+                # one system prompt per session; groups share content
+                prefix_id = rng.randrange(
+                    max(1, spec.shared_prefix_groups))
             history = 0
             rt = arrival
             for r in range(n_rounds):
                 if n_emitted >= spec.num_requests:
                     break
                 p = _sample_len(rng, spec, "prompt")
+                if r == 0 and prefix_id is not None:
+                    p += spec.shared_prefix_len   # system prompt up front
                 o = _sample_len(rng, spec, "output")
                 heapq.heappush(pending, (rt, rid, Request(
                     id=rid, arrival_time=rt, prompt_len=history + p,
                     output_len=o, session_id=sid, round_idx=r,
-                    history_len=history)))
+                    history_len=history, prefix_id=prefix_id,
+                    prefix_len=spec.shared_prefix_len
+                    if prefix_id is not None else 0)))
                 rid += 1
                 n_emitted += 1
                 history += p + o
@@ -241,7 +258,9 @@ def _parse_trace_record(i: int, rec: dict) -> Request:
         prompt_len=int(rec["prompt_len"]),
         output_len=int(rec["output_len"]),
         session_id=rec.get("session_id"),
-        round_idx=int(rec.get("round", 0)))
+        round_idx=int(rec.get("round", 0)),
+        prefix_id=rec.get("prefix_id"),
+        prefix_len=int(rec.get("prefix_len", 0)))
 
 
 class TraceSource(RequestSource):
@@ -310,6 +329,9 @@ class MergedSource(RequestSource):
             if r.session_id is not None:
                 # keep sessions distinct across tenants
                 r.session_id = r.session_id * n + self._order[t.tenant_id]
+            if r.prefix_id is not None:
+                # system prompts are tenant-private: never share across
+                r.prefix_id = r.prefix_id * n + self._order[t.tenant_id]
             yield r
 
     def __iter__(self) -> Iterator[Request]:
@@ -368,7 +390,12 @@ def generate_multi(tenants: Sequence) -> List[Request]:
 def save_trace(reqs: List[Request], path: str) -> None:
     with open(path, "w") as f:
         for r in reqs:
-            f.write(json.dumps({
-                "arrival": r.arrival_time, "prompt_len": r.prompt_len,
-                "output_len": r.output_len, "session_id": r.session_id,
-                "round": r.round_idx}) + "\n")
+            rec = {"arrival": r.arrival_time, "prompt_len": r.prompt_len,
+                   "output_len": r.output_len, "session_id": r.session_id,
+                   "round": r.round_idx}
+            if r.prefix_id is not None:
+                # shared-prefix tags round-trip (docs/MEMORY.md); plain
+                # workloads keep the seed trace format byte-identical
+                rec["prefix_id"] = r.prefix_id
+                rec["prefix_len"] = r.prefix_len
+            f.write(json.dumps(rec) + "\n")

@@ -1,0 +1,462 @@
+"""Hierarchical KV memory: SwapManager, shared-prefix copy-on-write
+blocks, and the preemption-mode plumbing (docs/MEMORY.md)."""
+import math
+
+import pytest
+
+from repro.core.mem.block_manager import BlockManager, MemoryConfig
+from repro.core.mem.swap import PREEMPTION_MODES, SwapConfig, SwapManager
+from repro.core.request import Request
+from repro.core.simulator import FaultSpec, SimSpec, WorkerSpec, simulate
+from repro.core.workload import WorkloadSpec, generate
+
+
+def mk_req(i, prompt=10, out=5, prefix_id=None, prefix_len=0):
+    return Request(id=i, arrival_time=0.0, prompt_len=prompt,
+                   output_len=out, prefix_id=prefix_id,
+                   prefix_len=prefix_len)
+
+
+def mk_bm(num_blocks=32, block_size=4, sharing=True):
+    return BlockManager(MemoryConfig(num_blocks=num_blocks,
+                                     block_size=block_size,
+                                     kv_bytes_per_token=1.0,
+                                     prefix_sharing=sharing))
+
+
+# ---------------------------------------------------------------------------
+# SwapManager unit behaviour
+# ---------------------------------------------------------------------------
+def test_swap_latency_formula():
+    sc = SwapConfig(pcie_bw=10e9, kv_bytes_per_token=1e6, block_size=16,
+                    setup_latency=1e-3, per_block_latency=1e-4)
+    sm = SwapManager(sc)
+    # 32 tokens -> 2 blocks: setup + 2*per_block + bytes/bw
+    expect = 1e-3 + 2 * 1e-4 + 32 * 1e6 / 10e9
+    assert sm.transfer_time(32) == pytest.approx(expect)
+    r = mk_req(0)
+    lat = sm.swap_out(r, 32)
+    assert lat == pytest.approx(expect)
+    assert sm.used_bytes == 32e6 and sm.holds(r)
+    assert sm.swap_in(r) == pytest.approx(expect)
+    assert sm.used_bytes == 0 and not sm.holds(r)
+    assert sm.bytes_out == sm.bytes_in == 32e6
+
+
+def test_swap_host_capacity_bound_and_drop_idempotent():
+    sm = SwapManager(SwapConfig(host_capacity_bytes=100.0,
+                                kv_bytes_per_token=1.0))
+    r1, r2 = mk_req(1), mk_req(2)
+    assert sm.can_swap_out(60)
+    sm.swap_out(r1, 60)
+    assert not sm.can_swap_out(60)       # 120 > 100
+    assert sm.can_swap_out(40)
+    sm.swap_out(r2, 40)
+    assert sm.drop(r1) == 60
+    assert sm.drop(r1) == 0              # idempotent
+    assert sm.used_bytes == 40.0
+    sm.drop(r2)
+    assert sm.used_bytes == 0.0
+
+
+def test_free_of_partially_swapped_request():
+    """Device blocks and a host copy can coexist mid-swap; releasing
+    both tiers restores all capacity exactly once."""
+    bm = mk_bm(num_blocks=16, block_size=4, sharing=False)
+    sm = SwapManager(SwapConfig(kv_bytes_per_token=1.0))
+    r = mk_req(0, prompt=40)
+    bm.allocate(r, 40)                   # 10 device blocks
+    sm.swap_out(r, 16)                   # 4 blocks' worth parked in host
+    assert bm.num_free == 6 and sm.used_bytes == 16.0
+    assert bm.free(r) == 10
+    assert sm.drop(r) == 16
+    assert bm.num_free == 16 and sm.used_bytes == 0.0
+    # double free of both tiers: no-ops, no underflow
+    assert bm.free(r) == 0
+    assert sm.drop(r) == 0
+    assert bm.num_free == 16 and sm.used_bytes == 0.0
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix copy-on-write blocks
+# ---------------------------------------------------------------------------
+def test_prefix_sharing_full_blocks():
+    bm = mk_bm()
+    a = mk_req(0, prompt=10, prefix_id=7, prefix_len=8)
+    b = mk_req(1, prompt=10, prefix_id=7, prefix_len=8)
+    bm.allocate(a, 10)                   # 3 blocks, 2 prefix registered
+    assert bm.num_used == 3 and a.shared_tokens == 0
+    bm.allocate(b, 10)                   # shares the 2 full prefix blocks
+    assert bm.num_used == 4              # only b's tail is fresh
+    assert b.shared_tokens == 8 and b.cached_len == 8
+    assert bm.block_table(a)[:2] == bm.block_table(b)[:2]
+    assert bm.ref[bm.block_table(a)[0]] == 2
+    # freeing the registrant keeps the sharer's blocks resident
+    assert bm.free(a) == 1               # only a's private tail freed
+    assert bm.num_used == 3
+    assert bm.free(b) == 3
+    assert bm.num_free == 32
+
+
+def test_prefix_partial_tail_not_shared_when_written_past():
+    """A request whose tokens extend past the partial tail block must
+    not take it by reference (it writes its own tokens there)."""
+    bm = mk_bm()
+    a = mk_req(0, prompt=10, prefix_id=3, prefix_len=6)   # tail valid=2
+    b = mk_req(1, prompt=10, prefix_id=3, prefix_len=6)
+    bm.allocate(a, 10)
+    bm.allocate(b, 10)
+    # only block 0 (full) is shared; both write into their own block 1
+    assert bm.block_table(a)[0] == bm.block_table(b)[0]
+    assert bm.block_table(a)[1] != bm.block_table(b)[1]
+    assert b.shared_tokens == 4
+
+
+def test_copy_on_write_append_and_rollback_across_boundary():
+    """The satellite edge case: a request sharing the partial tail block
+    appends (copy-on-write), grows past a boundary, then rolls back
+    across that boundary onto the CoW block."""
+    bm = mk_bm()
+    a = mk_req(0, prompt=6, prefix_id=1, prefix_len=6)
+    b = mk_req(1, prompt=6, prefix_id=1, prefix_len=6)
+    bm.allocate(a, 6)                    # blocks [f0, p1(valid=2)]
+    bm.allocate(b, 6)                    # shares both: prompt == prefix
+    assert bm.num_used == 2 and b.shared_tokens == 6
+    shared_tail = bm.block_table(b)[1]
+    assert bm.ref[shared_tail] == 2
+    assert bm.growth_blocks(b, 1) == 1   # CoW copy needed, no boundary
+    bm.append_tokens(b, 1)               # CoW fires
+    assert b.cow_copies == 1 and bm.cow_copies == 1
+    cow_block = bm.block_table(b)[1]
+    assert cow_block != shared_tail
+    assert bm.ref[shared_tail] == 1 and bm.ref[cow_block] == 1
+    assert bm.block_table(a)[1] == shared_tail     # a untouched
+    bm.append_tokens(b, 4)               # 7 -> 11 tokens: crosses into b2
+    assert len(bm.block_table(b)) == 3
+    # rollback across the block boundary back onto the CoW block
+    released = bm.rollback_tokens(b, 5)  # 11 -> 6 tokens
+    assert released == 1                 # b2 freed; CoW block retained
+    assert bm.block_table(b) == [bm.block_table(a)[0], cow_block]
+    assert bm.resident_tokens(b) == 6
+    # second append after rollback: block is already private, no CoW
+    bm.append_tokens(b, 1)
+    assert b.cow_copies == 1
+    bm.free(a)
+    bm.free(b)
+    assert bm.num_free == 32
+
+
+def test_refcount_double_free_protection():
+    """Freeing shared-block holders in any order (and repeatedly) never
+    double-frees a block or leaks one."""
+    bm = mk_bm(num_blocks=16)
+    reqs = [mk_req(i, prompt=9, prefix_id=5, prefix_len=8)
+            for i in range(3)]
+    for r in reqs:
+        bm.allocate(r, 9)
+    # 2 shared + 3 private tails
+    assert bm.num_used == 5
+    assert bm.ref[bm.block_table(reqs[0])[0]] == 3
+    for r in reqs:
+        bm.free(r)
+        bm.free(r)                       # double free: no-op
+    assert bm.num_free == 16
+    assert not bm.ref and not bm.tables
+    # the shared index forgot the blocks too: a new allocation re-registers
+    c = mk_req(9, prompt=9, prefix_id=5, prefix_len=8)
+    bm.allocate(c, 9)
+    assert c.shared_tokens == 0          # nothing resident to share
+
+
+def test_rollback_releases_shared_reference_only():
+    bm = mk_bm()
+    a = mk_req(0, prompt=8, prefix_id=2, prefix_len=8)
+    b = mk_req(1, prompt=8, prefix_id=2, prefix_len=8)
+    bm.allocate(a, 8)
+    bm.allocate(b, 8)
+    assert bm.num_used == 2
+    # roll b back into the shared region: drops b's reference on the
+    # second shared block (a still holds it), frees nothing
+    assert bm.rollback_tokens(b, 5) == 0
+    assert bm.num_used == 2 and bm.ref[bm.block_table(a)[1]] == 1
+    assert bm.free(a) == 1               # block 0 still held by b
+    assert bm.num_used == 1
+    assert bm.free(b) == 1
+    assert bm.num_free == 32
+
+
+def test_trie_keeps_block_zero_registration():
+    """Regression: physical block id 0 is a live trie payload — pruning
+    a sibling registration must not drop it (falsy-payload bug)."""
+    bm = mk_bm(num_blocks=8, block_size=4)
+    a = mk_req(0, prompt=8, prefix_id=1, prefix_len=8)
+    bm.allocate(a, 8)                    # registers blocks 0 and 1
+    assert bm.block_table(a)[0] == 0
+    b = mk_req(1, prompt=4, prefix_id=1, prefix_len=4)
+    bm.allocate(b, 4)                    # shares only block 0
+    assert bm.block_table(b) == [0] and bm.ref[0] == 2
+    bm.free(a)                           # releases block 1; prunes its node
+    # block 0 must still be registered: a third request re-shares it
+    c = mk_req(2, prompt=4, prefix_id=1, prefix_len=4)
+    bm.allocate(c, 4)
+    assert bm.block_table(c) == [0] and c.shared_tokens == 4
+    bm.free(b)
+    bm.free(c)
+    assert bm.num_free == 8
+
+
+def test_partial_tail_not_shared_with_reserve():
+    """Regression: static batching pre-books the whole output
+    (reserve), so a request that will write past the partial tail must
+    neither count it in can_allocate nor take it at allocation —
+    otherwise the reserved append later OOMs on an unbudgeted CoW."""
+    bm = mk_bm(num_blocks=2, block_size=4)
+    a = mk_req(0, prompt=6, out=4, prefix_id=1, prefix_len=6)
+    bm.allocate(a, 6)                    # full block + partial tail
+    b = mk_req(1, prompt=6, out=4, prefix_id=1, prefix_len=6)
+    # nominal need for 6+4 tokens = 3 blocks; only the full block may
+    # resolve via sharing (tail excluded: 10 > 6), so 2 fresh > 0 free
+    assert not bm.can_allocate(6, headroom_tokens=4, req=b)
+    bm2 = mk_bm(num_blocks=8, block_size=4)
+    bm2.allocate(a, 6)
+    assert bm2.can_allocate(6, headroom_tokens=4, req=b)
+    bm2.allocate(b, 6, reserve=4)
+    assert b.shared_tokens == 4          # full block only, tail private
+    assert bm2.block_table(a)[1] != bm2.block_table(b)[1]
+    # the reserved append proceeds in place with no copy-on-write
+    bm2.append_tokens(b, 4)
+    assert b.cow_copies == 0
+
+
+def test_static_batching_with_prefix_sharing_end_to_end():
+    wl = WorkloadSpec(num_requests=40, qps=0.0, seed=5, lengths="fixed",
+                      prompt_len=32, output_len=16,
+                      shared_prefix_len=500, shared_prefix_groups=1)
+    res = simulate(SimSpec(
+        arch="llama2-7b",
+        workers=[WorkerSpec(hw="A100", gpu_mem_util=0.25)],
+        workload=wl, local_policy="static", max_batch=16,
+        prefix_sharing=True))
+    assert len(res.finished) == 40
+    assert res.memory_summary()["shared_tokens"] > 0
+
+
+def test_trace_roundtrip_preserves_prefix_fields(tmp_path):
+    from repro.core.workload import save_trace
+    wl = WorkloadSpec(num_requests=40, qps=5.0, seed=6,
+                      shared_prefix_len=128, shared_prefix_groups=3)
+    reqs = generate(wl)
+    p = str(tmp_path / "trace.jsonl")
+    save_trace(reqs, p)
+    reqs2 = generate(WorkloadSpec(num_requests=40, lengths="trace",
+                                  trace_path=p))
+    assert [(r.prefix_id, r.prefix_len) for r in reqs] == \
+        [(r.prefix_id, r.prefix_len) for r in reqs2]
+    # double round-trip is a fixed point
+    p2 = str(tmp_path / "trace2.jsonl")
+    save_trace(reqs2, p2)
+    assert open(p).read() == open(p2).read()
+
+
+def test_can_allocate_accounts_for_shared_blocks():
+    bm = mk_bm(num_blocks=6, block_size=4)
+    a = mk_req(0, prompt=16, prefix_id=1, prefix_len=16)
+    bm.allocate(a, 16)                   # 4 blocks, all registered
+    b = mk_req(1, prompt=20, prefix_id=1, prefix_len=16)
+    # nominal need = 5 blocks > 2 free, but 4 resolve via sharing
+    assert not bm.can_allocate(20)
+    assert bm.can_allocate(20, req=b)
+    bm.allocate(b, 20)
+    assert bm.num_used == 5
+
+
+# ---------------------------------------------------------------------------
+# workload plumbing
+# ---------------------------------------------------------------------------
+def test_workload_shared_prefix_fields():
+    wl = WorkloadSpec(num_requests=60, qps=5.0, seed=0, lengths="fixed",
+                      prompt_len=32, output_len=8, shared_prefix_len=100,
+                      shared_prefix_groups=2, multi_round_frac=0.5)
+    reqs = generate(wl)
+    assert all(r.prefix_id in (0, 1) and r.prefix_len == 100
+               for r in reqs)
+    by_sess = {}
+    for r in reqs:
+        by_sess.setdefault(r.session_id, []).append(r)
+    for rounds in by_sess.values():
+        rounds.sort(key=lambda r: r.round_idx)
+        # the system prompt rides in the first round's prompt only
+        assert rounds[0].prompt_len == 132
+        assert len({r.prefix_id for r in rounds}) == 1
+
+
+def test_workload_without_prefix_unchanged():
+    base = WorkloadSpec(num_requests=50, qps=5.0, seed=3)
+    a = generate(base)
+    b = generate(WorkloadSpec(num_requests=50, qps=5.0, seed=3))
+    assert [(r.arrival_time, r.prompt_len) for r in a] == \
+        [(r.arrival_time, r.prompt_len) for r in b]
+    assert all(r.prefix_id is None and r.prefix_len == 0 for r in a)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end simulation
+# ---------------------------------------------------------------------------
+def _pressure(mode, **kw):
+    d = dict(arch="llama2-7b",
+             workers=[WorkerSpec(hw="A100", gpu_mem_util=0.25)],
+             workload=WorkloadSpec(num_requests=100, qps=25.0, seed=1),
+             preemption_mode=mode)
+    d.update(kw)
+    return SimSpec(**d)
+
+
+def test_swap_mode_end_to_end_and_deterministic():
+    r1 = simulate(_pressure("swap"))
+    r2 = simulate(_pressure("swap"))
+    assert len(r1.finished) == 100
+    m = r1.memory_summary()
+    assert m["swap_preempts"] > 0
+    assert m["swap_ins"] == m["swap_preempts"]
+    assert m["recompute_preempts"] == 0
+    assert m["swap_bytes_out"] > 0
+    assert [x.t_finish for x in r1.requests] == \
+        [x.t_finish for x in r2.requests]
+    # swap counters surface in summary()
+    assert r1.summary()["swap_preempts"] == m["swap_preempts"]
+
+
+def test_swap_differs_from_recompute_under_preemption():
+    sw = simulate(_pressure("swap"))
+    rec = simulate(_pressure("recompute"))
+    assert rec.memory_summary()["swap_preempts"] == 0
+    assert rec.memory_summary()["preempts"] > 0
+    assert [x.t_finish for x in sw.requests] != \
+        [x.t_finish for x in rec.requests]
+
+
+def test_unknown_preemption_mode_rejected():
+    assert "recompute" in PREEMPTION_MODES and "swap" in PREEMPTION_MODES
+    with pytest.raises(ValueError):
+        simulate(_pressure("hibernate"))
+
+
+def test_swap_counters_fold_into_streaming_stats():
+    """retain_requests=False drops Request objects, so swap/prefix
+    counters must survive in StreamingStats (docs/PERFORMANCE.md)."""
+    exact = simulate(_pressure("swap"))
+    drop = simulate(_pressure("swap", streaming=True,
+                              retain_requests=False))
+    assert drop.stats is not None
+    me, md = exact.memory_summary(), drop.memory_summary()
+    for k in ("preempts", "swap_preempts", "swap_ins",
+              "shared_tokens", "cow_copies"):
+        assert me[k] == md[k], (k, me[k], md[k])
+    assert drop.stats.swap_outs == me["swap_preempts"]
+
+
+def test_prefix_sharing_raises_capacity_end_to_end():
+    wl = WorkloadSpec(num_requests=80, qps=0.0, seed=2, lengths="fixed",
+                      prompt_len=64, output_len=32,
+                      shared_prefix_len=1000, shared_prefix_groups=1)
+    def run(share):
+        return simulate(SimSpec(
+            arch="llama2-7b",
+            workers=[WorkerSpec(hw="A100", gpu_mem_util=0.25)],
+            workload=wl, prefix_sharing=share))
+    on, off = run(True), run(False)
+    assert len(on.finished) == len(off.finished) == 80
+    mx_on = max(s.n_running for s in on.worker_mem[0])
+    mx_off = max(s.n_running for s in off.worker_mem[0])
+    assert mx_on >= 1.5 * mx_off, (mx_on, mx_off)
+    m = on.memory_summary()
+    assert m["prefix_hit_rate"] > 0.5 and m["shared_tokens"] > 0
+    assert on.summary()["prefix_hit_rate"] == m["prefix_hit_rate"]
+    assert off.memory_summary()["shared_tokens"] == 0
+
+
+def test_swap_mode_with_worker_failure_no_leak():
+    """Killing a worker holding swapped-out requests drops their host
+    copies; everything still finishes after re-dispatch."""
+    spec = SimSpec(
+        arch="llama2-7b",
+        workers=[WorkerSpec(hw="A100", gpu_mem_util=0.25),
+                 WorkerSpec(hw="A100", gpu_mem_util=0.25)],
+        workload=WorkloadSpec(num_requests=80, qps=30.0, seed=4),
+        preemption_mode="swap",
+        faults=[FaultSpec(time=3.0, worker=0, kind="fail")])
+    res = simulate(spec)
+    assert len(res.finished) == 80
+    # worker 0's host tier drained with it
+    assert res.swap_stats[0]["used_bytes"] == 0.0
+
+
+def test_full_eviction_cascade_plan_not_empty():
+    """Regression: when sharing makes every eviction free 0 blocks, the
+    loop can preempt every survivor — the resulting plan must not
+    report empty, or the worker never applies the evictions and the
+    victims strand in ``running`` with freed KV."""
+    from collections import deque
+    from repro.core.sched.local import ContinuousBatching
+
+    class W:
+        pass
+
+    w = W()
+    w.mem = BlockManager(MemoryConfig(num_blocks=2, block_size=16,
+                                      kv_bytes_per_token=1.0,
+                                      prefix_sharing=True))
+    w.pool = None
+    w.waiting = deque()
+    w.running = []
+    # two decodes whose whole 32-token context is a shared prefix:
+    # freeing either releases no blocks, so both get evicted
+    for i in range(2):
+        r = mk_req(i, prompt=32, prefix_id=1, prefix_len=32)
+        w.mem.allocate(r, 32)
+        r.prefill_done_len = 32
+        r.tokens_generated = 1
+        w.running.append(r)
+    assert w.mem.num_free == 0
+    plan = ContinuousBatching(max_batch=8, max_batched_tokens=64).plan(w)
+    assert len(plan.preempted) == 2 and not plan.decode
+    assert not plan.empty, "preemption-only plan must be applied"
+
+
+def test_block_manager_invariants_with_sharing_random_ops():
+    """The property-test invariants, extended for refcounts: free+used
+    == total, ref equals table multiplicity, coverage holds."""
+    import random
+    rng = random.Random(0)
+    bm = mk_bm(num_blocks=24, block_size=4)
+    reqs = {i: mk_req(i, prompt=12, prefix_id=i % 2, prefix_len=8)
+            for i in range(6)}
+    for _ in range(400):
+        i = rng.randrange(6)
+        r = reqs[i]
+        op = rng.choice(["alloc", "append", "rollback", "free"])
+        try:
+            if op == "alloc" and not bm.resident(r):
+                bm.allocate(r, rng.randint(8, 20))
+            elif op == "append" and bm.resident(r):
+                bm.append_tokens(r, rng.randint(1, 6))
+            elif op == "rollback" and bm.resident(r):
+                n = rng.randint(1, bm.resident_tokens(r))
+                bm.rollback_tokens(r, n)
+            elif op == "free" and bm.resident(r):
+                bm.free(r)
+        except MemoryError:
+            pass
+        assert bm.num_free + bm.num_used == 24
+        mult = {}
+        for t in bm.tables.values():
+            for blk in t:
+                mult[blk] = mult.get(blk, 0) + 1
+        assert mult == bm.ref, "refcount drift"
+        assert set(mult).isdisjoint(bm.free_blocks)
+        for rid, table in bm.tables.items():
+            assert len(table) * 4 >= bm.token_counts[rid]
+    for r in reqs.values():
+        if bm.resident(r):
+            bm.free(r)
+    assert bm.num_free == 24
