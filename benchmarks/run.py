@@ -3,12 +3,69 @@
 Prints one CSV line per benchmark: ``name,us_per_call,derived`` where
 ``derived`` carries the reproduced finding. Full row data lands in
 results/bench/*.csv.  ``--quick`` shrinks request counts (CI).
+
+The registry is self-checking (``--check-registry``, wired into
+scripts/ci.sh): every module in benchmarks/ must either appear in
+``benches`` below or be listed in ``NON_BENCHMARKS``, and every module
+named in ``SMOKE_GATED`` (the ones scripts/ci.sh runs with ``--smoke``)
+must actually expose a ``main`` accepting ``--smoke`` — so adding a
+benchmark without registering it, or wiring a smoke gate that silently
+does not exist, fails CI instead of silently skipping coverage.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import pkgutil
 import sys
 import traceback
+
+#: modules in benchmarks/ that are infrastructure, not benchmarks —
+#: perf_hillclimb is the §Perf iteration driver (subprocess dry-runs
+#: feeding EXPERIMENTS.md), not a table/figure reproduction
+NON_BENCHMARKS = {"common", "run", "finalize_docs", "roofline_report",
+                  "perf_hillclimb"}
+#: benchmarks scripts/ci.sh runs as `--smoke` CI gates; each must expose
+#: main(argv) handling "--smoke"
+SMOKE_GATED = {"sim_speed", "kv_hierarchy", "parallelism"}
+
+
+def discover_modules() -> set:
+    """Every importable module name under benchmarks/."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    return {m.name for m in pkgutil.iter_modules([here])}
+
+
+def check_registry(registered: set) -> list:
+    """Registry drift errors (empty list = OK)."""
+    import importlib
+    import inspect
+
+    errors = []
+    discovered = discover_modules()
+    for name in sorted(discovered - registered - NON_BENCHMARKS):
+        errors.append(
+            f"benchmarks/{name}.py is not registered: add it to the "
+            f"benches list in benchmarks/run.py (or to NON_BENCHMARKS "
+            f"if it is not a benchmark)")
+    for name in sorted(registered - discovered):
+        errors.append(f"registered benchmark {name!r} has no module "
+                      f"benchmarks/{name}.py")
+    for name in sorted(SMOKE_GATED):
+        if name not in discovered:
+            errors.append(f"SMOKE_GATED benchmark {name!r} has no module "
+                          f"benchmarks/{name}.py")
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        main = getattr(mod, "main", None)
+        if not callable(main):
+            errors.append(f"benchmarks/{name}.py is SMOKE_GATED but has "
+                          f"no main(argv)")
+        elif "--smoke" not in inspect.getsource(mod):
+            errors.append(f"benchmarks/{name}.py is SMOKE_GATED but its "
+                          f"main() does not handle --smoke; the "
+                          f"scripts/ci.sh gate would silently no-op")
+    return errors
 
 
 def main(argv=None):
@@ -16,13 +73,17 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--check-registry", action="store_true",
+                    help="verify benchmark-module registry + smoke "
+                         "gates, run nothing")
     args = ap.parse_args(argv)
     q = args.quick
 
     from benchmarks import (batching, disagg_ratio, disagg_validation,
                             hardware_sub, kv_hierarchy, mem_footprint,
-                            memcache, memratio, platform_sweep, sim_speed,
-                            spec_decode, tenant_qos, validation)
+                            memcache, memratio, parallelism,
+                            platform_sweep, sim_speed, spec_decode,
+                            tenant_qos, validation)
 
     benches = [
         ("validation", lambda: validation.run(n_req=20 if q else 40)),
@@ -42,7 +103,19 @@ def main(argv=None):
         ("tenant_qos", lambda: tenant_qos.run(quick=q)),
         ("spec_decode", lambda: spec_decode.run(quick=q)),
         ("kv_hierarchy", lambda: kv_hierarchy.run(quick=q)),
+        ("parallelism", lambda: parallelism.run(quick=q)),
     ]
+    errors = check_registry({name for name, _ in benches})
+    for e in errors:
+        print(f"registry FAIL: {e}", file=sys.stderr)
+    if errors:
+        return 2
+    if args.check_registry:
+        print(f"registry OK: {len(benches)} benchmarks registered, "
+              f"{len(SMOKE_GATED)} smoke-gated "
+              f"({', '.join(sorted(SMOKE_GATED))})")
+        return 0
+
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     failed = 0
@@ -57,7 +130,6 @@ def main(argv=None):
             traceback.print_exc()
     # roofline report appends its own line if artifacts exist
     try:
-        import os
         from benchmarks import roofline_report
         d = os.path.join(roofline_report.RESULTS, "dryrun_probe")
         if os.path.isdir(d) and os.listdir(d):

@@ -20,6 +20,7 @@ Three entry points:
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 from repro.core.simulator import SimSpec, Simulation, WorkerSpec
@@ -180,12 +181,18 @@ def run_smoke(n: int = 10_000, n_workers: int = 8, qps: float = 1000.0,
     assert wall < wall_budget_s, f"streaming smoke too slow: {wall:.1f}s"
     rss = _current_rss_mb()
     assert rss < rss_budget_mb, f"RSS {rss:.0f}MB over budget"
+    p99_err = abs(ss["latency_p99"] - es["latency_p99"]) \
+        / es["latency_p99"]
     print(f"sim_speed_smoke,OK,n={n},wall={wall:.1f}s,rss={rss:.0f}MB,"
-          f"max_live={stream.max_live},p99_rel_err="
-          f"{abs(ss['latency_p99'] - es['latency_p99']) / es['latency_p99']:.4%}")
+          f"max_live={stream.max_live},p99_rel_err={p99_err:.4%}")
+    # persist the gate numbers so CI can upload them as an artifact
+    b = Bench("sim_speed_smoke")
+    b.add(n=n, wall_s=fmt(wall, 2), rss_mb=fmt(rss, 1),
+          max_live=stream.max_live, p99_rel_err=fmt(p99_err, 6))
+    b.finish(derived=f"wall={wall:.1f}s_rss={rss:.0f}MB")
 
 
-if __name__ == "__main__":
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="10k streaming CI smoke (time/RSS/accuracy gate)")
@@ -193,7 +200,7 @@ if __name__ == "__main__":
                     help="10^4-10^6 request streaming scaling curve")
     ap.add_argument("--counts", type=int, nargs="+",
                     help="override request counts for --scale")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.smoke:
         run_smoke()
     elif args.scale:
@@ -201,3 +208,8 @@ if __name__ == "__main__":
                     else (10_000, 100_000, 1_000_000))
     else:
         run()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

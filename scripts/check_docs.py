@@ -15,7 +15,10 @@ Checks:
      without docs fail CI (doc-drift guard),
   4. every ``SimSpec.preemption_mode``, every pool eviction policy and
      every ``HARDWARE`` entry appears as a code-span in docs/MEMORY.md
-     (same doc-drift guard for the memory subsystem).
+     (same doc-drift guard for the memory subsystem),
+  5. every ``ParallelSpec`` field and every ``CLUSTERS`` / ``LINKS``
+     hardware entry appears as a code-span in docs/PARALLELISM.md —
+     new parallelism knobs or topology presets without docs fail CI.
 
 Run:  python scripts/check_docs.py        (exits non-zero on failure)
 """
@@ -141,6 +144,33 @@ def check_memory_docs() -> list:
     return errors
 
 
+def check_parallelism_docs() -> list:
+    """Every ParallelSpec knob and every cluster/link topology preset
+    must be documented as a `code span` in docs/PARALLELISM.md."""
+    import dataclasses
+
+    from repro.core.comm import LINKS
+    from repro.core.costmodel.hardware import CLUSTERS, ParallelSpec
+
+    errors = []
+    path = os.path.join(ROOT, "docs", "PARALLELISM.md")
+    if not os.path.exists(path):
+        return ["docs/PARALLELISM.md: missing (parallelism doc coverage "
+                "needs it)"]
+    with open(path) as f:
+        text = f.read()
+    fields = [f.name for f in dataclasses.fields(ParallelSpec)]
+    groups = [("ParallelSpec field", fields),
+              ("CLUSTERS entry", sorted(CLUSTERS)),
+              ("LINKS entry", sorted(LINKS))]
+    for what, names in groups:
+        for n in names:
+            if f"`{n}`" not in text and f'`"{n}"`' not in text:
+                errors.append(f"{what} `{n}` not documented in "
+                              f"docs/PARALLELISM.md")
+    return errors
+
+
 def main() -> int:
     errors = []
     docs = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
@@ -152,13 +182,15 @@ def main() -> int:
     errors.extend(check_module_docstrings("examples/*.py"))
     errors.extend(check_registry_docs())
     errors.extend(check_memory_docs())
+    errors.extend(check_parallelism_docs())
     for e in errors:
         print(f"docs-check FAIL: {e}")
     if not errors:
         n = len(docs) + 1
         print(f"docs-check OK: {n} markdown files, links + anchors resolve, "
               f"all benchmarks/examples have module docstrings, all "
-              f"policies/workload kinds and memory registries documented")
+              f"policies/workload kinds and memory/parallelism registries "
+              f"documented")
     return 1 if errors else 0
 
 

@@ -1,39 +1,87 @@
 #!/usr/bin/env bash
-# CI gate: docs check + tier-1 tests (collection errors fail fast) +
-# smokes, so "suite no longer collects", "docs link rotted" and "demo
-# broke" all surface before merge.
+# CI gate: docs check + benchmark-registry check + tier-1 tests
+# (collection errors fail fast) + smokes, so "suite no longer collects",
+# "docs link rotted", "gate silently unwired" and "demo broke" all
+# surface before merge.
 #
-#   bash scripts/ci.sh
+#   bash scripts/ci.sh            # full gate (what .github/workflows runs)
+#   bash scripts/ci.sh --quick    # docs + registry + pytest only
+#                                 # (fast local pre-commit loop)
+#
+# Prints a per-stage timing summary at the end.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== docs: links + module docstrings =="
-python scripts/check_docs.py
+QUICK=0
+[[ "${1:-}" == "--quick" ]] && QUICK=1
 
-echo "== tier-1: pytest =="
-python -m pytest -x -q
+STAGE_NAMES=()
+STAGE_SECS=()
 
-echo "== smoke: examples/multi_tenant.py (<30s) =="
-timeout 30 python examples/multi_tenant.py > /dev/null
-echo "multi-tenant smoke OK"
+stage() {
+    local name="$1"; shift
+    echo "== ${name} =="
+    local t0=$SECONDS
+    "$@"
+    STAGE_NAMES+=("$name")
+    STAGE_SECS+=($((SECONDS - t0)))
+    echo "${name} OK"
+}
 
-echo "== smoke: examples/speculative.py (<30s) =="
-timeout 30 python examples/speculative.py > /dev/null
-echo "speculative-decoding smoke OK"
+summary() {
+    echo
+    echo "== stage timing summary =="
+    local i total=0
+    for i in "${!STAGE_NAMES[@]}"; do
+        printf '  %-42s %4ds\n' "${STAGE_NAMES[$i]}" "${STAGE_SECS[$i]}"
+        total=$((total + STAGE_SECS[$i]))
+    done
+    printf '  %-42s %4ds\n' "total" "$total"
+}
+trap summary EXIT
+
+stage "docs: links + module docstrings" \
+    python scripts/check_docs.py
+
+stage "benchmarks: registry + smoke-gate wiring" \
+    env PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/run.py --check-registry
+
+stage "tier-1: pytest" \
+    python -m pytest -x -q
+
+if [[ "$QUICK" == "1" ]]; then
+    echo "(--quick: skipping smokes)"
+    exit 0
+fi
+
+# the example output (not the stage banner) goes to /dev/null, so the
+# redirect lives inside the staged command
+stage "smoke: examples/multi_tenant.py (<30s)" \
+    bash -c 'timeout 30 python examples/multi_tenant.py > /dev/null'
+
+stage "smoke: examples/speculative.py (<30s)" \
+    bash -c 'timeout 30 python examples/speculative.py > /dev/null'
 
 # outer timeout covers the exact-mode baseline + the streaming run;
 # the benchmark's internal 60s wall budget covers the streaming run only
-echo "== smoke: sim_speed streaming scale gate (10k requests) =="
-PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+stage "smoke: sim_speed streaming scale gate (10k requests)" \
+    env PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     timeout 240 python benchmarks/sim_speed.py --smoke
-echo "sim-speed streaming smoke OK"
 
 # (a) swap preemption must drain a 95%-memory-pressure workload without
 # deadlocking; (b) prefix sharing must be byte-identical to non-shared
 # when no prefixes overlap (docs/MEMORY.md)
-echo "== smoke: kv_hierarchy memory gates =="
-PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+stage "smoke: kv_hierarchy memory gates" \
+    env PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     timeout 120 python benchmarks/kv_hierarchy.py --smoke
-echo "kv-hierarchy smoke OK"
+
+# parallelism gates (docs/PARALLELISM.md): TP2/NVLink beats single GPU,
+# pipeline bubble fraction matches (pp-1)/(m+pp-1) within 2%,
+# ParallelSpec(1,1,1) is byte-identical to the pre-parallelism model,
+# and the TP-vs-PP crossover corners hold
+stage "smoke: parallelism crossover + bubble gates" \
+    env PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    timeout 300 python benchmarks/parallelism.py --smoke

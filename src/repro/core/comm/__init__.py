@@ -6,6 +6,12 @@ they naturally overlap with compute, and a link can be configured to
 serialize (one transfer at a time, the paper's "default method") or to
 pipeline through a bounded preload buffer (the paper's overlap study):
 with ``buffer_chunks > 1`` up to that many chunks are in flight at once.
+
+:mod:`repro.core.comm.collectives` builds on the same ``LinkSpec``
+abstraction to price parallelism collectives analytically — ring
+all-reduce for tensor parallelism and p2p send/recv for pipeline-stage
+hand-off — with topology (intra-node vs inter-node link selection)
+supplied by ``costmodel.hardware.ClusterSpec`` (docs/PARALLELISM.md).
 """
 from __future__ import annotations
 
@@ -67,3 +73,8 @@ class Link:
         self.bytes_moved += nbytes
         self.transfers += 1
         return self.env.timeout(done_in)
+
+
+# imported last: collectives pulls LinkSpec back out of this module
+from repro.core.comm.collectives import (  # noqa: E402,F401
+    p2p_time, ring_allreduce_time, stage_boundary_link, tp_group_link)

@@ -1,5 +1,6 @@
-from repro.core.costmodel.hardware import HardwareSpec, HARDWARE  # noqa: F401
+from repro.core.costmodel.hardware import (  # noqa: F401
+    CLUSTERS, ClusterSpec, HARDWARE, HardwareSpec, ParallelSpec)
 from repro.core.costmodel.operators import BatchMix, OperatorGraph  # noqa: F401
 from repro.core.costmodel.backends import (  # noqa: F401
-    CostBackend, RooflineBackend, TabularBackend, XLACalibratedBackend,
-    make_backend)
+    CostBackend, PipelineBackend, RooflineBackend, TabularBackend,
+    XLACalibratedBackend, make_backend)

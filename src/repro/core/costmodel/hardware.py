@@ -7,10 +7,18 @@ of this repo, and the PIM entry follows the paper's GDDR6-AiM setting
 (Fig. 12): a memory-centric part whose effective bandwidth, not FLOPs, is
 the selling point.  ``price`` is relative to A100 = 1.0 (used by the
 Fig. 12 budget analysis).
+
+``ClusterSpec`` adds the interconnect topology between chips (GPUs per
+node, intra-node vs inter-node ``LinkSpec``) and ``ParallelSpec`` the
+parallelism strategy mapped onto it (tensor/pipeline degree, data
+replicas) — together the hardware axes the exploration harness sweeps
+(docs/PARALLELISM.md).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
+
+from repro.core.comm import DCN, ETH100G, ICI, LinkSpec, NVLINK
 
 
 @dataclass(frozen=True)
@@ -64,3 +72,74 @@ CPU_HOST = HardwareSpec("CPU", flops=2e11, mem_bw=40e9, mem_cap=32e9,
 
 HARDWARE = {h.name: h for h in
             [A100, A100_40G, A100_LOW, V100, G6_AIM, TPU_V5E, CPU_HOST]}
+
+
+# ---------------------------------------------------------------------------
+# Interconnect topology + parallelism strategy (docs/PARALLELISM.md)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ClusterSpec:
+    """Interconnect topology of one serving replica's devices.
+
+    Devices are numbered consecutively; nodes hold ``gpus_per_node`` of
+    them, wired internally by ``intra_link`` (NVLink / ICI class) and to
+    each other by ``inter_link`` (NIC class).  The collective cost model
+    (repro.core.comm.collectives) uses this to decide which link a TP
+    ring or a PP stage boundary traverses, so parallelism cost depends
+    on *where* the ranks land, not just how many there are.
+    """
+    name: str
+    gpus_per_node: int = 8
+    intra_link: LinkSpec = NVLINK
+    inter_link: LinkSpec = ETH100G
+
+    def with_(self, **kw) -> "ClusterSpec":
+        return replace(self, **kw)
+
+
+#: DGX-class box: 8 NVLinked GPUs per node, 100 GbE between nodes.
+DGX_A100 = ClusterSpec("dgx-a100", gpus_per_node=8,
+                       intra_link=NVLINK, inter_link=ETH100G)
+#: one GPU per host — every device-to-device hop crosses the 100 GbE NIC
+#: (the "slow inter-node links" corner of the TP-vs-PP crossover).
+CROSS_NODE_100G = ClusterSpec("cross-node-100g", gpus_per_node=1,
+                              intra_link=NVLINK, inter_link=ETH100G)
+#: one GPU per host behind data-center network links (50 Gbps class).
+CROSS_NODE_DCN = ClusterSpec("cross-node-dcn", gpus_per_node=1,
+                             intra_link=NVLINK, inter_link=DCN)
+#: TPU v5e topology: 4-chip ICI-connected trays, DCN between trays.
+TPU_V5E_POD = ClusterSpec("tpuv5e-pod", gpus_per_node=4,
+                          intra_link=ICI, inter_link=DCN)
+
+CLUSTERS = {c.name: c for c in
+            [DGX_A100, CROSS_NODE_100G, CROSS_NODE_DCN, TPU_V5E_POD]}
+
+
+@dataclass(frozen=True)
+class ParallelSpec:
+    """Parallelism strategy of one logical worker (docs/PARALLELISM.md).
+
+    ``tp`` tensor-shards every layer (all-reduce per layer pair), ``pp``
+    splits the layer stack into pipeline stages fed ``microbatches``
+    micro-batches per iteration, and ``replicas`` data-parallel-clones
+    the whole worker set behind the global scheduler.  One worker spec
+    with ``ParallelSpec(tp, pp)`` therefore occupies ``tp * pp``
+    devices; the defaults are exactly the pre-parallelism single-device
+    cost model.
+    """
+    tp: int = 1            # tensor-parallel degree (devices per stage)
+    pp: int = 1            # pipeline stages
+    replicas: int = 1      # data-parallel copies of the worker set
+    #: micro-batches per pipeline iteration; the bubble fraction is
+    #: (pp - 1) / (microbatches + pp - 1)
+    microbatches: int = 2
+
+    def __post_init__(self):
+        if self.tp < 1 or self.pp < 1 or self.replicas < 1 \
+                or self.microbatches < 1:
+            raise ValueError(f"ParallelSpec degrees must be >= 1: {self}")
+
+    @property
+    def devices(self) -> int:
+        """Accelerators one replica of this strategy occupies."""
+        return self.tp * self.pp

@@ -19,7 +19,7 @@ so the simulator cannot drift from the runtime.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, List, Optional, Tuple
 
 from repro.configs.base import (ArchConfig, AUDIO, DENSE, ENCDEC, HYBRID,
@@ -102,6 +102,15 @@ class OperatorGraph:
     dtype_bytes: int
     ops: List[Operator] = field(default_factory=list)
     collective_bytes_per_token: float = 0.0   # TP all-reduce traffic
+    #: per-layer collective structure (docs/PARALLELISM.md): number of
+    #: all-reduces per token-pass and the full activation bytes each one
+    #: reduces; the topology-aware backend prices these per ring step
+    #: while ``collective_bytes_per_token`` keeps the legacy flat volume
+    allreduce_count: int = 0
+    allreduce_bytes_per_token: float = 0.0
+    #: activation bytes one token carries across a pipeline-stage
+    #: boundary (hidden state, d_model * dtype_bytes)
+    act_bytes_per_token: float = 0.0
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -231,10 +240,60 @@ class OperatorGraph:
 
         # TP all-reduce traffic: 2 per layer (attn out + mlp out),
         # ring: 2*(tp-1)/tp of the activation bytes each.
+        g.act_bytes_per_token = float(d * dt)
         if tp > 1:
             g.collective_bytes_per_token = \
                 2 * L * 2 * (tp - 1) / tp * d * dt
+            g.allreduce_count = 2 * L
+            g.allreduce_bytes_per_token = float(d * dt)
         return g
+
+    # ------------------------------------------------------------------
+    def split_stages(self, pp: int) -> List["OperatorGraph"]:
+        """Partition the graph into ``pp`` pipeline stages
+        (docs/PARALLELISM.md).
+
+        Layer-repeated ops (``count > 1``) spread their repeat counts as
+        evenly as integer division allows; once-per-model ops pin to the
+        pipeline ends (``embed`` on stage 0, the lm head and any other
+        singleton on the last stage).  Per-layer collective metadata
+        splits proportionally, so each stage's TP all-reduces match its
+        layer share.  Invariant (tested): summing any op count, flops or
+        bytes over the stages reproduces the unsplit graph exactly.
+        """
+        if pp <= 1:
+            return [self]
+        stages = []
+        for s in range(pp):
+            g = OperatorGraph(cfg=self.cfg, tp=self.tp,
+                              dtype_bytes=self.dtype_bytes)
+            g.act_bytes_per_token = self.act_bytes_per_token
+            for op in self.ops:
+                if op.count > 1:
+                    c = op.count * (s + 1) // pp - op.count * s // pp
+                    if c:
+                        g.ops.append(replace(op, count=c))
+                elif op.name == "embed":
+                    if s == 0:
+                        g.ops.append(op)
+                elif s == pp - 1:
+                    g.ops.append(op)
+            if self.allreduce_count:
+                n_ar = self.allreduce_count * (s + 1) // pp \
+                    - self.allreduce_count * s // pp
+                g.allreduce_count = n_ar
+                g.allreduce_bytes_per_token = self.allreduce_bytes_per_token
+                g.collective_bytes_per_token = \
+                    self.collective_bytes_per_token * n_ar \
+                    / self.allreduce_count
+            elif self.collective_bytes_per_token:
+                # hand-built graph carrying only the flat volume: split
+                # it evenly so the collective cost survives stage-wise
+                # (mirrors the legacy fallback in collective_time)
+                g.collective_bytes_per_token = \
+                    self.collective_bytes_per_token / pp
+            stages.append(g)
+        return stages
 
     # ------------------------------------------------------------------
     def totals(self, m: BatchMix) -> Tuple[float, float]:

@@ -293,6 +293,10 @@ class Results:
     tenant_specs: Optional[Dict[str, object]] = None
     #: AdmissionController.stats() snapshot at end of sim
     admission_stats: Optional[Dict[str, Dict[str, float]]] = None
+    #: per-worker pipeline-parallel accounting (docs/PARALLELISM.md):
+    #: {wid: {"pp_bubble_time", "pp_comm_time", "pp_span_time",
+    #: "busy_time", "iterations"}} when the sim ran with pp > 1
+    parallel_stats: Optional[Dict[int, Dict[str, float]]] = None
     #: streaming aggregates when the sim ran with retain_requests=False;
     #: ``requests`` then holds only the (few) never-finished leftovers
     stats: Optional[StreamingStats] = None
@@ -434,6 +438,27 @@ class Results:
             out["prefix_hit_rate"] = hits / (hits + misses) \
                 if hits + misses else 0.0
         return out
+
+    # ---- parallelism (docs/PARALLELISM.md) ----------------------------
+    def parallel_summary(self) -> Dict[str, float]:
+        """Pipeline-parallel accounting across workers: total fill/drain
+        bubble and stage-boundary comm time, and their fractions of the
+        pipeline span (step time x steps, framework overhead excluded).
+        ``bubble_fraction`` matches the closed form
+        ``(pp-1)/(microbatches+pp-1)`` when every iteration fills its
+        configured micro-batch count (tail iterations shrink it)."""
+        if not self.parallel_stats:
+            return {"pp_bubble_time": 0.0, "pp_comm_time": 0.0,
+                    "pp_span_time": 0.0, "bubble_fraction": 0.0,
+                    "comm_fraction": 0.0}
+        vals = self.parallel_stats.values()
+        bubble = sum(s["pp_bubble_time"] for s in vals)
+        comm = sum(s["pp_comm_time"] for s in vals)
+        span = sum(s["pp_span_time"] for s in vals)
+        return {"pp_bubble_time": bubble, "pp_comm_time": comm,
+                "pp_span_time": span,
+                "bubble_fraction": bubble / span if span else 0.0,
+                "comm_fraction": comm / span if span else 0.0}
 
     # ---- speculative decoding (repro.core.specdecode) -----------------
     def spec_summary(self) -> Dict[str, float]:

@@ -30,6 +30,11 @@ class IterationPlan:
     #: PCIe time of this iteration's KV swap-outs/-ins (docs/MEMORY.md);
     #: billed serially into the iteration by the worker
     swap_latency: float = 0.0
+    #: pipeline-parallel accounting (docs/PARALLELISM.md), filled by the
+    #: worker after costing: fill/drain bubble time and stage-boundary
+    #: p2p activation-transfer time of this iteration
+    pp_bubble: float = 0.0
+    comm_latency: float = 0.0
 
     @property
     def empty(self) -> bool:

@@ -22,6 +22,15 @@ instead of materializing the request list, and
 ``StreamingStats`` sketches — together they bound live ``Request``
 objects by the in-flight population, enabling million-request runs.
 
+Parallelism & topology (docs/PARALLELISM.md): ``SimSpec.parallel``
+(``ParallelSpec(tp, pp, replicas)``) maps each worker onto ``tp * pp``
+devices of a ``SimSpec.cluster`` topology — tensor-parallel all-reduces
+priced per ring step over the link the TP group occupies, pipeline
+stages fed micro-batches with explicit bubble + p2p activation
+accounting, and data-parallel replicas of the whole worker set.  The
+defaults (tp=pp=replicas=1, cluster=None) are byte-identical to the
+pre-parallelism cost model.
+
 Multi-tenant QoS layer (repro.core.tenancy, beyond paper): when
 ``SimSpec.tenants`` is set, per-tenant workloads are merged into one
 deterministic arrival stream and an ``AdmissionController`` — a
@@ -43,9 +52,11 @@ from repro.configs import get_config
 from repro.configs.base import ArchConfig
 from repro.core import comm as comm_mod
 from repro.core.breakpoints import Hooks, disagg_hooks
-from repro.core.costmodel.backends import (CostBackend, RooflineBackend,
-                                           TabularBackend)
-from repro.core.costmodel.hardware import HARDWARE, HardwareSpec
+from repro.core.costmodel.backends import (CostBackend, PipelineBackend,
+                                           RooflineBackend, TabularBackend)
+from repro.core.costmodel.hardware import (CLUSTERS, ClusterSpec, DGX_A100,
+                                           HARDWARE, HardwareSpec,
+                                           ParallelSpec)
 from repro.core.costmodel.operators import kv_bytes_per_token, \
     state_bytes_per_seq
 from repro.core.engine import Environment
@@ -74,6 +85,15 @@ class WorkerSpec:
     mem_cap_override: Optional[float] = None  # bytes (Fig. 13/15 sweeps)
     hw_overrides: Dict[str, float] = field(default_factory=dict)
     slowdown: float = 1.0
+
+
+def effective_tp(ws: WorkerSpec, parallel: ParallelSpec) -> int:
+    """Tensor degree a worker actually runs at: the per-worker
+    ``WorkerSpec.tp`` override (Fig. 12-style heterogeneous setups)
+    wins over the cluster-wide ``ParallelSpec.tp``.  Shared by the
+    worker builder and the exploration harness's price model so the
+    two can never disagree."""
+    return ws.tp if ws.tp != 1 else parallel.tp
 
 
 @dataclass(frozen=True)
@@ -109,6 +129,17 @@ class SimSpec:
     #: host DRAM bytes available for swapped KV; None = the worker
     #: hardware's ``HardwareSpec.host_mem_cap``
     host_mem_cap: Optional[float] = None
+    #: parallelism strategy applied to every worker (docs/PARALLELISM.md):
+    #: tensor degree (per-worker ``WorkerSpec.tp`` != 1 still wins),
+    #: pipeline stages with micro-batched iterations, and data-parallel
+    #: replicas of the whole worker set.  The default is the pre-existing
+    #: single-device cost model, byte-identical.
+    parallel: ParallelSpec = field(default_factory=ParallelSpec)
+    #: interconnect topology for collective costing: a ClusterSpec, a
+    #: name from ``CLUSTERS``, or None for the legacy flat TP term
+    #: (volume / hw.link_bw, latency-free).  Pipeline parallelism needs
+    #: a topology; pp > 1 with ``cluster=None`` assumes ``dgx-a100``.
+    cluster: Optional[Union[str, ClusterSpec]] = None
     pool: Optional[PoolConfig] = None
     kv_link: comm_mod.LinkSpec = comm_mod.NVLINK
     faults: Sequence[FaultSpec] = ()
@@ -196,15 +227,44 @@ class Simulation:
         if spec.spec_decode is not None:
             da = spec.spec_decode.draft_arch
             draft_cfg = da if isinstance(da, ArchConfig) else get_config(da)
-        for i, ws in enumerate(spec.workers):
+        par = spec.parallel
+        cluster = spec.cluster
+        if isinstance(cluster, str):
+            try:
+                cluster = CLUSTERS[cluster]
+            except KeyError:
+                raise ValueError(f"unknown cluster {cluster!r}; "
+                                 f"have {sorted(CLUSTERS)}")
+        if cluster is None and par.pp > 1:
+            cluster = DGX_A100         # pp needs a topology for p2p links
+        if par.pp > 1 and spec.backend != "roofline":
+            # only the roofline backend knows how to split into stages;
+            # a tabular/xla model would silently cost a 4-device
+            # pipeline as one device while the KV pool scales by pp
+            raise ValueError(
+                f"ParallelSpec(pp={par.pp}) requires backend='roofline' "
+                f"(got {spec.backend!r}); supply a pipeline-aware "
+                f"backend via backends_by_worker instead")
+        #: data parallelism: replicate the whole worker set, each copy a
+        #: full tp x pp serving instance behind the global scheduler
+        worker_specs = list(spec.workers) * par.replicas
+        for i, ws in enumerate(worker_specs):
+            tp = effective_tp(ws, par)
+            #: replicas clone the original worker set, so per-worker
+            #: config keyed by index (backends_by_worker) follows the
+            #: original position, not the expanded one
+            base_i = i % len(spec.workers)
             hw = HARDWARE[ws.hw]
             if ws.hw_overrides:
                 hw = hw.with_(**ws.hw_overrides)
             if ws.mem_cap_override is not None:
                 hw = hw.with_(mem_cap=ws.mem_cap_override)
+            # a pp-stage worker owns pp devices: its aggregate KV budget
+            # is pp device capacities minus one full (tp-sharded) copy of
+            # the weights, which the stages hold 1/pp each
             mem_cfg = MemoryConfig.from_model(
-                self.cfg, hw.mem_cap, block_size=spec.block_size,
-                dtype_bytes=spec.dtype_bytes, tp=ws.tp,
+                self.cfg, hw.mem_cap * par.pp, block_size=spec.block_size,
+                dtype_bytes=spec.dtype_bytes, tp=tp,
                 gpu_mem_util=ws.gpu_mem_util,
                 watermark=max(0.0, 1.0 - ws.max_mem_ratio),
                 prefix_sharing=spec.prefix_sharing)
@@ -217,13 +277,20 @@ class Simulation:
                     kv_bytes_per_token=mem_cfg.kv_bytes_per_token,
                     state_bytes_per_seq=mem_cfg.state_bytes_per_seq,
                     block_size=mem_cfg.block_size))
-            if spec.backends_by_worker and i in spec.backends_by_worker:
-                backend = spec.backends_by_worker[i]
+            if spec.backends_by_worker and base_i in spec.backends_by_worker:
+                backend = spec.backends_by_worker[base_i]
             elif spec.backend == "tabular":
                 backend = TabularBackend.fit(spec.backend_samples)
+            elif par.pp > 1:
+                backend = PipelineBackend.for_model(
+                    self.cfg, hw,
+                    ParallelSpec(tp=tp, pp=par.pp,
+                                 microbatches=par.microbatches),
+                    cluster, dtype_bytes=spec.dtype_bytes)
             else:
                 backend = RooflineBackend.for_model(
-                    self.cfg, hw, tp=ws.tp, dtype_bytes=spec.dtype_bytes)
+                    self.cfg, hw, tp=tp, dtype_bytes=spec.dtype_bytes,
+                    cluster=cluster)
             sched = make_local_scheduler(
                 spec.local_policy, max_batch=spec.max_batch,
                 max_batched_tokens=spec.max_batched_tokens,
@@ -239,7 +306,8 @@ class Simulation:
                 dhw = hw.with_(**spec.spec_decode.draft_hw_overrides) \
                     if spec.spec_decode.draft_hw_overrides else hw
                 draft_backend = RooflineBackend.for_model(
-                    draft_cfg, dhw, tp=ws.tp, dtype_bytes=spec.dtype_bytes)
+                    draft_cfg, dhw, tp=tp, dtype_bytes=spec.dtype_bytes,
+                    cluster=cluster)
             w = Worker(self.env, i, hw, backend, mem_cfg, sched,
                        run_prefill=ws.role in ("both", "prefill"),
                        run_decode=ws.role in ("both", "decode"),
@@ -365,6 +433,15 @@ class Simulation:
             if self.spec.tenants else None,
             admission_stats=self.admission.stats()
             if self.admission else None,
+            parallel_stats={
+                w.wid: {"pp_bubble_time": w.pp_bubble_time,
+                        "pp_comm_time": w.pp_comm_time,
+                        "pp_span_time": w.pp_span_time,
+                        "busy_time": w.busy_time,
+                        "iterations": w.iterations}
+                for w in self.workers}
+            if self.spec.parallel.pp > 1
+            or any(w.pp_span_time for w in self.workers) else None,
             stats=self.stats,
             max_live=self.max_live)
 

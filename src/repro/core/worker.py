@@ -88,6 +88,13 @@ class Worker:
         self._running_load = 0
         self.iterations = 0
         self.busy_time = 0.0
+        #: pipeline-parallel accounting (docs/PARALLELISM.md): cumulative
+        #: fill/drain bubble, stage-boundary p2p comm, and pipeline span
+        #: (step time x steps, framework overhead excluded) — so
+        #: bubble/span can be checked against the closed-form fraction
+        self.pp_bubble_time = 0.0
+        self.pp_comm_time = 0.0
+        self.pp_span_time = 0.0
         self._wake: Optional[Event] = None
         self.proc = env.process(self._run(), name=f"worker{wid}")
 
@@ -208,7 +215,19 @@ class Worker:
                     if b == 0))
             # swap transfers are PCIe-bound, not compute: they bill at
             # face value rather than scaling with the worker slowdown
-            t = self.backend.iteration_time(mix) * self.slowdown \
+            t_compute = self.backend.iteration_time(mix)
+            breakdown = getattr(self.backend, "last_breakdown", None)
+            if breakdown is not None:
+                # scale by the worker slowdown like the billed time, so
+                # bubble/comm/span share busy_time's time base
+                sd = self.slowdown
+                bubble, comm, span = breakdown
+                plan.pp_bubble = bubble * sd
+                plan.comm_latency = comm * sd
+                self.pp_bubble_time += bubble * sd
+                self.pp_comm_time += comm * sd
+                self.pp_span_time += span * sd
+            t = t_compute * self.slowdown \
                 + plan.retrieve_latency + plan.swap_latency
             if plan.spec_decode:
                 t += self._draft_time(plan.spec_decode) * self.slowdown

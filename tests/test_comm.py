@@ -1,0 +1,195 @@
+"""comm edge cases (zero-byte / latency-dominated / contention),
+collective cost primitives, and DisaggPD.reassign fallback."""
+import pytest
+
+from repro.core.comm import (DCN, ETH100G, Link, LinkSpec, NVLINK,
+                             p2p_time, ring_allreduce_time,
+                             stage_boundary_link, tp_group_link)
+from repro.core.costmodel.hardware import (CLUSTERS, ClusterSpec,
+                                           CROSS_NODE_100G, DGX_A100)
+from repro.core.engine import Environment
+from repro.core.sched.global_sched import DisaggPD, make_global_scheduler
+
+
+# ---------------------------------------------------------------------------
+# Link edge cases
+# ---------------------------------------------------------------------------
+def test_zero_byte_transfer_costs_only_latency():
+    spec = LinkSpec("t", bandwidth=1e9, latency=5e-6)
+    env = Environment()
+    link = Link(env, spec)
+    assert link.transfer_time(0) == pytest.approx(5e-6)
+    link.transfer(0)
+    env.run()
+    assert env.now == pytest.approx(5e-6)
+    assert link.bytes_moved == 0.0
+    assert link.transfers == 1
+
+
+def test_small_message_latency_dominated():
+    """For messages far below bandwidth*latency, the wire time is the
+    latency floor — and stays monotone in size."""
+    spec = LinkSpec("t", bandwidth=100e9, latency=30e-6)
+    env = Environment()
+    link = Link(env, spec)
+    t_small = link.transfer_time(64)          # 0.64 ns of bandwidth
+    assert t_small == pytest.approx(30e-6, rel=1e-3)
+    sizes = [0, 64, 4096, 2 ** 20, 2 ** 30]
+    times = [link.transfer_time(s) for s in sizes]
+    assert times == sorted(times)
+    # the large transfer is bandwidth-dominated instead
+    assert times[-1] > 100 * t_small
+    assert times[-1] == pytest.approx(2 ** 30 / 100e9 + 30e-6)
+
+
+def test_link_contention_serializes():
+    """A serializing link runs back-to-back transfers sequentially; a
+    non-serializing link overlaps them."""
+    env = Environment()
+    link = Link(env, LinkSpec("ser", bandwidth=1e9, latency=0.0,
+                              serialize=True))
+    done = []
+    link.transfer(1e9).wait(lambda ev: done.append(env.now))
+    link.transfer(1e9).wait(lambda ev: done.append(env.now))
+    env.run()
+    assert done == pytest.approx([1.0, 2.0])
+
+    env2 = Environment()
+    link2 = Link(env2, LinkSpec("par", bandwidth=1e9, latency=0.0,
+                                serialize=False))
+    done2 = []
+    link2.transfer(1e9).wait(lambda ev: done2.append(env2.now))
+    link2.transfer(1e9).wait(lambda ev: done2.append(env2.now))
+    env2.run()
+    assert done2 == pytest.approx([1.0, 1.0])
+
+
+def test_contention_respects_in_flight_transfer():
+    """A transfer issued while the link is busy queues behind the
+    remaining busy time, not behind a fresh full transfer."""
+    env = Environment()
+    link = Link(env, LinkSpec("ser", bandwidth=1e9, latency=0.0))
+
+    def proc():
+        link.transfer(1e9)                   # busy until t=1
+        yield env.timeout(0.5)
+        ev = link.transfer(1e9)              # starts at t=1, done t=2
+        yield ev
+        assert env.now == pytest.approx(2.0)
+
+    env.process(proc())
+    env.run()
+
+
+# ---------------------------------------------------------------------------
+# collective primitives
+# ---------------------------------------------------------------------------
+def test_p2p_time_zero_bytes_free():
+    assert p2p_time(0, NVLINK) == 0.0
+    assert p2p_time(-1, NVLINK) == 0.0
+    assert p2p_time(1e9, NVLINK) == pytest.approx(
+        NVLINK.latency + 1e9 / NVLINK.bandwidth)
+
+
+def test_ring_allreduce_degenerate_and_formula():
+    assert ring_allreduce_time(1e6, 1, NVLINK) == 0.0
+    assert ring_allreduce_time(0, 8, NVLINK) == 0.0
+    n, nbytes = 4, 1e6
+    expect = 2 * (n - 1) * (NVLINK.latency
+                            + nbytes / n / NVLINK.bandwidth)
+    assert ring_allreduce_time(nbytes, n, NVLINK) == pytest.approx(expect)
+
+
+def test_ring_allreduce_latency_floor_grows_with_ranks():
+    """Tiny messages are pure latency: 2(n-1) hops each."""
+    t8 = ring_allreduce_time(8, 8, ETH100G)
+    t2 = ring_allreduce_time(8, 2, ETH100G)
+    assert t8 > t2 * 3
+    assert t2 == pytest.approx(2 * ETH100G.latency, rel=1e-2)
+
+
+def test_topology_link_selection():
+    assert tp_group_link(DGX_A100, 4) is DGX_A100.intra_link
+    assert tp_group_link(DGX_A100, 16) is DGX_A100.inter_link
+    assert tp_group_link(CROSS_NODE_100G, 2) is CROSS_NODE_100G.inter_link
+    # aligned stages each fit their own node: tp == gpus_per_node means
+    # stage 1 owns devices 8..15 entirely on node 1
+    assert tp_group_link(DGX_A100, 8, stage=1) is DGX_A100.intra_link
+    # mis-aligned group: tp=6 stage 1 owns devices 6..11, straddling
+    # the node boundary at device 8 -> pays the inter-node link
+    assert tp_group_link(DGX_A100, 6, stage=0) is DGX_A100.intra_link
+    assert tp_group_link(DGX_A100, 6, stage=1) is DGX_A100.inter_link
+    # tp=2, 8 gpus/node: stages 0..3 on node 0 -> boundary 3 crosses
+    assert stage_boundary_link(DGX_A100, 2, 0) is DGX_A100.intra_link
+    assert stage_boundary_link(DGX_A100, 2, 3) is DGX_A100.inter_link
+    # tp == gpus_per_node: every stage boundary crosses nodes
+    assert stage_boundary_link(DGX_A100, 8, 0) is DGX_A100.inter_link
+    # one gpu per node: everything crosses
+    assert stage_boundary_link(CROSS_NODE_100G, 1, 0) \
+        is CROSS_NODE_100G.inter_link
+    # mis-aligned stages: gpn=4, tp=3 -> stage1 ends at device 5 and
+    # stage2 starts at device 6, both on node 1: the hand-off itself is
+    # intra-node even though the stages' lead devices are not
+    c4 = ClusterSpec("c4", gpus_per_node=4)
+    assert stage_boundary_link(c4, 3, 1) is c4.intra_link
+    # ...while stage0 -> stage1 (device 2 -> 3) stays on node 0
+    assert stage_boundary_link(c4, 3, 0) is c4.intra_link
+    # and gpn=4, tp=2, stage1 -> stage2 is device 3 -> 4: crosses
+    assert stage_boundary_link(c4, 2, 1) is c4.inter_link
+
+
+def test_cluster_registry_consistent():
+    for name, c in CLUSTERS.items():
+        assert c.name == name
+        assert c.gpus_per_node >= 1
+    assert isinstance(DGX_A100.with_(gpus_per_node=4), ClusterSpec)
+    assert DCN.bandwidth < ETH100G.bandwidth < NVLINK.bandwidth
+
+
+# ---------------------------------------------------------------------------
+# DisaggPD.reassign with no eligible decode workers
+# ---------------------------------------------------------------------------
+class _StubWorker:
+    def __init__(self, wid, *, alive=True, run_prefill=True,
+                 run_decode=True, load=0):
+        self.wid = wid
+        self.alive = alive
+        self.run_prefill = run_prefill
+        self.run_decode = run_decode
+        self._load = load
+
+    def load_tokens(self):
+        return self._load
+
+
+class _StubReq:
+    worker_id = 0
+
+
+def test_disagg_reassign_no_decode_workers_falls_back():
+    """A prefill-only cluster (no run_decode worker) must still return
+    an alive worker instead of crashing — the request decodes where its
+    prefill ran."""
+    sched = make_global_scheduler("disagg_pd")
+    assert isinstance(sched, DisaggPD)
+    workers = [_StubWorker(0, run_decode=False, load=5),
+               _StubWorker(1, run_decode=False, load=2)]
+    wid = sched.reassign(_StubReq(), workers)
+    assert wid == 1                        # least-loaded alive fallback
+
+
+def test_disagg_reassign_skips_dead_decode_workers():
+    workers = [_StubWorker(0, run_prefill=False, alive=False),
+               _StubWorker(1, run_prefill=False, load=9),
+               _StubWorker(2, run_decode=False, load=0)]
+    wid = DisaggPD().reassign(_StubReq(), workers)
+    assert wid == 1                        # only alive decode worker
+
+
+def test_disagg_assign_round_robins_prefill_only():
+    sched = DisaggPD()
+    workers = [_StubWorker(0, run_decode=False),
+               _StubWorker(1, run_prefill=False),
+               _StubWorker(2, run_decode=False)]
+    picks = [sched.assign(_StubReq(), workers) for _ in range(4)]
+    assert picks == [0, 2, 0, 2]

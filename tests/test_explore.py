@@ -1,0 +1,194 @@
+"""Exploration harness (repro.explore): grid expansion, the resumable
+per-point cache, Pareto extraction, and multiprocessing fan-out."""
+import json
+import os
+
+import pytest
+
+from repro.core.costmodel.hardware import ParallelSpec
+from repro.core.simulator import SimSpec, WorkerSpec
+from repro.core.workload import WorkloadSpec
+from repro.explore import (DEFAULT_OBJECTIVES, SweepSpec, dominates,
+                           grid_points, pareto_frontier, point_key,
+                           run_sweep, spec_price)
+
+
+def _tiny_builder(point):
+    """Module-level so the multiprocessing pool can pickle it."""
+    return SimSpec(
+        arch="llama2-7b",
+        workload=WorkloadSpec(num_requests=4, qps=0.0, seed=0,
+                              lengths="fixed", prompt_len=point["prompt"],
+                              output_len=4),
+        parallel=ParallelSpec(tp=point["tp"]),
+        cluster="dgx-a100")
+
+
+TINY_AXES = {"prompt": [32, 64], "tp": [1, 2]}
+
+
+# ---------------------------------------------------------------------------
+# grid + keys
+# ---------------------------------------------------------------------------
+def test_grid_points_product_and_order():
+    pts = grid_points(TINY_AXES)
+    assert len(pts) == 4
+    assert pts[0] == {"prompt": 32, "tp": 1}
+    assert pts == grid_points(TINY_AXES)        # stable
+
+
+def test_point_key_stable_and_distinct():
+    pts = grid_points(TINY_AXES)
+    keys = [point_key(p) for p in pts]
+    assert len(set(keys)) == len(keys)
+    assert keys == [point_key(p) for p in grid_points(TINY_AXES)]
+    # key order inside the dict must not matter
+    assert point_key({"a": 1, "b": 2}) == point_key({"b": 2, "a": 1})
+
+
+def test_spec_price_counts_devices():
+    spec = SimSpec(workers=[WorkerSpec(hw="A100")],
+                   parallel=ParallelSpec(tp=2, pp=2, replicas=3))
+    assert spec_price(spec) == pytest.approx(12.0)   # 2*2*3 A100s
+    spec2 = SimSpec(workers=[WorkerSpec(hw="V100", tp=4)],
+                    parallel=ParallelSpec(tp=2))
+    assert spec2.workers[0].tp == 4
+    assert spec_price(spec2) == pytest.approx(0.25 * 4)
+    # hw_overrides reach the price model, matching the simulated worker
+    spec3 = SimSpec(workers=[WorkerSpec(hw="A100",
+                                        hw_overrides={"price": 2.5})])
+    assert spec_price(spec3) == pytest.approx(2.5)
+
+
+# ---------------------------------------------------------------------------
+# resumable sweep cache
+# ---------------------------------------------------------------------------
+def test_sweep_runs_and_resumes(tmp_path):
+    sweep = SweepSpec(name="t", builder=_tiny_builder, axes=TINY_AXES)
+    out = str(tmp_path / "sweep")
+    r1 = run_sweep(sweep, out)
+    assert r1.n_simulated == 4 and r1.n_cached == 0
+    assert len(r1.rows) == 4
+    assert os.path.exists(r1.csv_path)
+    assert os.path.exists(r1.pareto_path)
+    assert all(row["throughput"] > 0 for row in r1.rows)
+
+    # full re-run: everything cached, nothing simulated
+    r2 = run_sweep(sweep, out)
+    assert r2.n_simulated == 0 and r2.n_cached == 4
+    assert r2.rows == r1.rows
+
+    # kill two points ("sweep died half way"): only they re-simulate
+    pts = grid_points(TINY_AXES)
+    for p in pts[:2]:
+        os.remove(os.path.join(out, "points", f"{point_key(p)}.json"))
+    r3 = run_sweep(sweep, out)
+    assert r3.n_simulated == 2 and r3.n_cached == 2
+    assert r3.rows == r1.rows                  # deterministic sim
+
+
+def test_default_metrics_reads_streaming_sketches():
+    """Drop-mode specs must not produce NaN objectives: the metrics row
+    falls back to the StreamingStats sketches."""
+    from repro.core.simulator import simulate
+    from repro.explore import default_metrics
+    spec = SimSpec(
+        arch="llama2-7b",
+        workload=WorkloadSpec(num_requests=64, qps=50.0, seed=0,
+                              lengths="fixed", prompt_len=32,
+                              output_len=8),
+        streaming=True, retain_requests=False)
+    row = default_metrics(spec, simulate(spec))
+    assert row["throughput"] > 0
+    assert row["p99_ttft"] == row["p99_ttft"]          # not NaN
+    assert row["cost_per_1k_tokens"] == row["cost_per_1k_tokens"]
+    assert row["finished"] == 64
+
+
+def test_sweep_version_salts_cache_and_force_resimulates(tmp_path):
+    """A version bump (cost model changed) or force=True must ignore
+    the existing cache instead of serving stale results."""
+    out = str(tmp_path / "sweep")
+    v1 = SweepSpec(name="t", builder=_tiny_builder, axes=TINY_AXES,
+                   version="v1")
+    assert run_sweep(v1, out).n_simulated == 4
+    assert run_sweep(v1, out).n_simulated == 0
+    v2 = SweepSpec(name="t", builder=_tiny_builder, axes=TINY_AXES,
+                   version="v2")
+    assert run_sweep(v2, out).n_simulated == 4       # keys differ
+    assert point_key({"a": 1}, "v1") != point_key({"a": 1}, "v2")
+    r = run_sweep(v2, out, force=True)
+    assert r.n_simulated == 4 and r.n_cached == 0
+
+
+def test_sweep_rejects_corrupt_and_mismatched_cache(tmp_path):
+    sweep = SweepSpec(name="t", builder=_tiny_builder, axes=TINY_AXES)
+    out = str(tmp_path / "sweep")
+    run_sweep(sweep, out)
+    pts = grid_points(TINY_AXES)
+    p0 = os.path.join(out, "points", f"{point_key(pts[0])}.json")
+    with open(p0, "w") as f:
+        f.write("{ not json")                  # torn write
+    p1 = os.path.join(out, "points", f"{point_key(pts[1])}.json")
+    with open(p1, "w") as f:
+        json.dump({"point": {"different": 1}, "metrics": {}}, f)
+    r = run_sweep(sweep, out)
+    assert r.n_simulated == 2 and r.n_cached == 2
+
+
+def test_sweep_multiprocessing(tmp_path):
+    sweep = SweepSpec(name="t", builder=_tiny_builder, axes=TINY_AXES)
+    out = str(tmp_path / "mp")
+    r = run_sweep(sweep, out, processes=2)
+    assert r.n_simulated == 4
+    # identical metrics to the inline run (deterministic DES)
+    r_inline = run_sweep(sweep, str(tmp_path / "inline"))
+    assert r.rows == r_inline.rows
+
+
+# ---------------------------------------------------------------------------
+# pareto
+# ---------------------------------------------------------------------------
+def test_dominates():
+    assert dominates((2.0, 1.0), (1.0, 1.0))
+    assert not dominates((1.0, 1.0), (1.0, 1.0))
+    assert not dominates((2.0, 0.5), (1.0, 1.0))
+
+
+def test_pareto_frontier_directions():
+    rows = [
+        {"throughput": 10.0, "p99_ttft": 1.0, "cost_per_1k_tokens": 1.0},
+        {"throughput": 20.0, "p99_ttft": 2.0, "cost_per_1k_tokens": 2.0},
+        {"throughput": 5.0, "p99_ttft": 2.0, "cost_per_1k_tokens": 2.0},
+        {"throughput": 10.0, "p99_ttft": 1.0, "cost_per_1k_tokens": 0.5},
+    ]
+    front = pareto_frontier(rows, DEFAULT_OBJECTIVES)
+    assert rows[0] not in front                # dominated by rows[3]
+    assert rows[1] in front                    # best throughput
+    assert rows[2] not in front
+    assert rows[3] in front
+
+
+def test_pareto_excludes_nan_and_missing():
+    rows = [{"throughput": float("nan"), "p99_ttft": 0.0,
+             "cost_per_1k_tokens": 0.0},
+            {"throughput": 1.0, "p99_ttft": 1.0,
+             "cost_per_1k_tokens": 1.0},
+            {"p99_ttft": 0.0, "cost_per_1k_tokens": 0.0}]
+    front = pareto_frontier(rows, DEFAULT_OBJECTIVES)
+    assert front == [rows[1]]
+
+
+def test_pareto_bad_direction_raises():
+    with pytest.raises(ValueError, match="direction"):
+        pareto_frontier([{"x": 1.0}], {"x": "upward"})
+
+
+def test_sweep_csv_has_frontier_subset(tmp_path):
+    sweep = SweepSpec(name="t", builder=_tiny_builder, axes=TINY_AXES)
+    out = str(tmp_path / "sweep")
+    r = run_sweep(sweep, out)
+    assert 1 <= len(r.frontier) <= len(r.rows)
+    with open(r.pareto_path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    assert len(lines) == len(r.frontier) + 1   # header + rows

@@ -1,0 +1,336 @@
+"""Parallelism cost model (docs/PARALLELISM.md): stage splitting,
+topology-aware collectives, pipeline bubbles, and SimSpec wiring."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.comm import LinkSpec
+from repro.core.costmodel.backends import (PipelineBackend,
+                                           RooflineBackend, make_backend)
+from repro.core.costmodel.hardware import (CLUSTERS, ClusterSpec,
+                                           DGX_A100, HARDWARE,
+                                           ParallelSpec)
+from repro.core.costmodel.operators import BatchMix, OperatorGraph
+from repro.core.simulator import SimSpec, Simulation, WorkerSpec, simulate
+from repro.core.workload import WorkloadSpec
+
+CFG = get_config("llama2-7b")
+A100 = HARDWARE["A100"]
+MIX = BatchMix.from_batch([(128, 0)], [100, 200, 300])
+
+
+def _fixed_wl(n=16, prompt=128, out=16):
+    return WorkloadSpec(num_requests=n, qps=0.0, seed=0, lengths="fixed",
+                        prompt_len=prompt, output_len=out)
+
+
+# ---------------------------------------------------------------------------
+# ParallelSpec / stage splitting
+# ---------------------------------------------------------------------------
+def test_parallel_spec_validates():
+    with pytest.raises(ValueError):
+        ParallelSpec(tp=0)
+    with pytest.raises(ValueError):
+        ParallelSpec(pp=1, microbatches=0)
+    assert ParallelSpec(tp=2, pp=4).devices == 8
+
+
+@pytest.mark.parametrize("pp", [2, 3, 4, 8])
+def test_split_stages_conserves_work(pp):
+    g = OperatorGraph.from_config(CFG, tp=2)
+    stages = g.split_stages(pp)
+    assert len(stages) == pp
+    f_full, b_full = g.totals(MIX)
+    f_sum = sum(s.totals(MIX)[0] for s in stages)
+    b_sum = sum(s.totals(MIX)[1] for s in stages)
+    assert f_sum == pytest.approx(f_full, rel=1e-12)
+    assert b_sum == pytest.approx(b_full, rel=1e-12)
+    assert sum(s.allreduce_count for s in stages) == g.allreduce_count
+
+
+def test_split_stages_pins_ends():
+    g = OperatorGraph.from_config(CFG, tp=1)
+    stages = g.split_stages(4)
+    names = [[op.name for op in s.ops] for s in stages]
+    assert "embed" in names[0]
+    assert "lm_head" in names[-1]
+    for mid in names[1:-1]:
+        assert "embed" not in mid and "lm_head" not in mid
+
+
+def test_split_stages_identity_for_pp1():
+    g = OperatorGraph.from_config(CFG, tp=1)
+    assert g.split_stages(1) == [g]
+
+
+def test_split_stages_every_family():
+    for name in ("qwen3-14b", "mamba2-130m", "zamba2-2.7b",
+                 "granite-moe-1b-a400m", "whisper-base"):
+        cfg = get_config(name)
+        g = OperatorGraph.from_config(cfg, tp=1)
+        stages = g.split_stages(2)
+        f_full, b_full = g.totals(MIX)
+        assert sum(s.totals(MIX)[0] for s in stages) == \
+            pytest.approx(f_full, rel=1e-12)
+        assert sum(s.totals(MIX)[1] for s in stages) == \
+            pytest.approx(b_full, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# topology-aware TP collectives
+# ---------------------------------------------------------------------------
+def test_legacy_flat_term_unchanged_without_cluster():
+    g = OperatorGraph.from_config(CFG, tp=4)
+    backend = RooflineBackend(hw=A100, graph=g)
+    flat = g.collective_bytes_per_token * MIX.new_tokens / A100.link_bw
+    assert backend.collective_time(MIX) == pytest.approx(flat)
+
+
+def test_topology_matches_legacy_on_zero_latency_link():
+    """A zero-latency intra link at hw.link_bw bandwidth reproduces the
+    legacy flat term exactly — the volume formulas agree."""
+    g = OperatorGraph.from_config(CFG, tp=4)
+    legacy = RooflineBackend(hw=A100, graph=g)
+    cl = ClusterSpec("eq", gpus_per_node=8,
+                     intra_link=LinkSpec("x", A100.link_bw, 0.0))
+    topo = RooflineBackend(hw=A100, graph=g, cluster=cl)
+    assert topo.iteration_time(MIX) == \
+        pytest.approx(legacy.iteration_time(MIX), rel=1e-12)
+
+
+def test_tp_pays_latency_and_inter_node_links():
+    g = OperatorGraph.from_config(CFG, tp=4)
+    intra = RooflineBackend(hw=A100, graph=g,
+                            cluster=CLUSTERS["dgx-a100"])
+    inter = RooflineBackend(hw=A100, graph=g,
+                            cluster=CLUSTERS["cross-node-100g"])
+    legacy = RooflineBackend(hw=A100, graph=g)
+    assert intra.iteration_time(MIX) > legacy.iteration_time(MIX)
+    assert inter.iteration_time(MIX) > 1.5 * intra.iteration_time(MIX)
+
+
+def test_cluster_with_legacy_only_graph_keeps_flat_term():
+    """A hand-built graph carrying only the flat collective volume (no
+    allreduce metadata) must not become communication-free when a
+    cluster is set."""
+    g = OperatorGraph(cfg=CFG, tp=4, dtype_bytes=2)
+    g.collective_bytes_per_token = 1e6
+    backend = RooflineBackend(hw=A100, graph=g,
+                              cluster=CLUSTERS["dgx-a100"])
+    flat = 1e6 * MIX.new_tokens / A100.link_bw
+    assert backend.collective_time(MIX) == pytest.approx(flat)
+
+
+def test_tp1_has_no_collective_cost():
+    g = OperatorGraph.from_config(CFG, tp=1)
+    backend = RooflineBackend(hw=A100, graph=g,
+                              cluster=CLUSTERS["cross-node-100g"])
+    assert backend.collective_time(MIX) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# PipelineBackend
+# ---------------------------------------------------------------------------
+def test_pipeline_bubble_closed_form():
+    for pp, m in [(2, 2), (4, 8), (8, 4)]:
+        backend = PipelineBackend.for_model(
+            CFG, A100, ParallelSpec(pp=pp, microbatches=m), DGX_A100)
+        backend.iteration_time(BatchMix.from_batch([], [256] * 64))
+        bubble, comm, span = backend.last_breakdown
+        assert bubble / span == pytest.approx((pp - 1) / (m + pp - 1))
+        assert comm > 0.0
+
+
+def test_pipeline_microbatches_capped_by_tokens():
+    backend = PipelineBackend.for_model(
+        CFG, A100, ParallelSpec(pp=2, microbatches=16), DGX_A100)
+    backend.iteration_time(BatchMix.from_batch([], [64] * 3))  # 3 tokens
+    bubble, _, span = backend.last_breakdown
+    assert bubble / span == pytest.approx(1 / 4)   # m=3, pp=2
+
+
+def test_pipeline_empty_mix_free():
+    backend = PipelineBackend.for_model(
+        CFG, A100, ParallelSpec(pp=4), DGX_A100)
+    assert backend.iteration_time(BatchMix()) == 0.0
+    assert backend.last_breakdown == (0.0, 0.0, 0.0)
+
+
+def test_pipeline_charges_overhead_once():
+    """pp=1, m=1 pipeline equals the plain roofline: same work, same
+    single iteration overhead."""
+    backend = PipelineBackend.for_model(
+        CFG, A100, ParallelSpec(pp=1, microbatches=1), DGX_A100)
+    plain = RooflineBackend.for_model(CFG, A100, tp=1,
+                                      cluster=DGX_A100)
+    assert backend.iteration_time(MIX) == \
+        pytest.approx(plain.iteration_time(MIX), rel=1e-12)
+
+
+def test_make_backend_builds_pipeline():
+    b = make_backend("roofline", CFG, A100,
+                     parallel=ParallelSpec(tp=2, pp=2),
+                     cluster=DGX_A100)
+    assert isinstance(b, PipelineBackend)
+    assert b.pp == 2
+    assert all(s.graph.tp == 2 for s in b.stages)
+    assert [s.stage for s in b.stages] == [0, 1]
+    b2 = make_backend("roofline", CFG, A100, parallel=ParallelSpec(tp=2),
+                      cluster=DGX_A100)
+    assert isinstance(b2, RooflineBackend)
+    assert b2.graph.tp == 2
+
+
+def test_make_backend_tp_arg_wins_in_pipeline_branch():
+    """An explicit tp argument must not be dropped when pp > 1 (same
+    precedence as the pp == 1 branch)."""
+    b = make_backend("roofline", CFG, A100, tp=4,
+                     parallel=ParallelSpec(pp=2), cluster=DGX_A100)
+    assert isinstance(b, PipelineBackend)
+    assert all(s.graph.tp == 4 for s in b.stages)
+
+
+def test_replicated_workers_share_custom_backend():
+    """backends_by_worker is keyed by original worker index: replicas
+    must clone the backend assignment, not fall back to the default."""
+    custom = RooflineBackend.for_model(CFG, A100.with_(flops=A100.flops
+                                                       * 2))
+    sim = Simulation(SimSpec(
+        workload=_fixed_wl(4), workers=[WorkerSpec()],
+        backends_by_worker={0: custom},
+        parallel=ParallelSpec(replicas=2)))
+    assert sim.workers[0].backend is custom
+    assert sim.workers[1].backend is custom
+
+
+# ---------------------------------------------------------------------------
+# SimSpec wiring
+# ---------------------------------------------------------------------------
+def test_default_parallel_spec_byte_identical():
+    wl = WorkloadSpec(num_requests=40, qps=10.0, seed=7)
+    base = simulate(SimSpec(workload=wl))
+    par = simulate(SimSpec(workload=wl, parallel=ParallelSpec(),
+                           cluster="dgx-a100"))
+    assert [(r.id, r.t_first_token, r.t_finish) for r in base.requests] \
+        == [(r.id, r.t_first_token, r.t_finish) for r in par.requests]
+
+
+def test_unknown_cluster_name_raises():
+    with pytest.raises(ValueError, match="unknown cluster"):
+        Simulation(SimSpec(workload=_fixed_wl(2), cluster="nope"))
+
+
+def test_pp_sim_finishes_and_accounts():
+    spec = SimSpec(workload=_fixed_wl(24),
+                   parallel=ParallelSpec(pp=4, microbatches=8),
+                   cluster="dgx-a100")
+    res = simulate(spec)
+    assert len(res.finished) == 24
+    summ = res.parallel_summary()
+    assert summ["pp_bubble_time"] > 0.0
+    assert summ["pp_comm_time"] > 0.0
+    assert summ["bubble_fraction"] == pytest.approx(3 / 11, rel=0.02)
+
+
+def test_pp_rejects_non_roofline_backend():
+    with pytest.raises(ValueError, match="roofline"):
+        Simulation(SimSpec(workload=_fixed_wl(2), backend="tabular",
+                           backend_samples=[],
+                           parallel=ParallelSpec(pp=2)))
+
+
+def test_pipeline_backend_by_worker_still_accounted():
+    """A PipelineBackend supplied via backends_by_worker (pp left at 1
+    on the spec) must still surface its bubble/comm accounting."""
+    pb = PipelineBackend.for_model(CFG, A100,
+                                   ParallelSpec(pp=2, microbatches=2),
+                                   DGX_A100)
+    res = simulate(SimSpec(workload=_fixed_wl(8),
+                           backends_by_worker={0: pb}))
+    assert res.parallel_stats is not None
+    assert res.parallel_summary()["bubble_fraction"] > 0.0
+
+
+def test_split_stages_keeps_flat_only_collective_volume():
+    """A hand-built flat-volume graph keeps its collective cost across
+    a stage split (mirrors the collective_time legacy fallback)."""
+    g = OperatorGraph(cfg=CFG, tp=4, dtype_bytes=2)
+    g.collective_bytes_per_token = 1e6
+    stages = g.split_stages(4)
+    assert sum(s.collective_bytes_per_token for s in stages) == \
+        pytest.approx(1e6)
+
+
+def test_pp_accounting_scales_with_slowdown():
+    """Bubble/comm/span share busy_time's time base: a slowed worker
+    scales them all, leaving the bubble fraction unchanged."""
+    def run_with(slowdown):
+        return simulate(SimSpec(
+            workload=_fixed_wl(16),
+            workers=[WorkerSpec(slowdown=slowdown)],
+            parallel=ParallelSpec(pp=4, microbatches=8),
+            cluster="dgx-a100"))
+
+    base, slow = run_with(1.0), run_with(2.0)
+    sb, ss = base.parallel_stats[0], slow.parallel_stats[0]
+    assert ss["pp_span_time"] == pytest.approx(2 * sb["pp_span_time"])
+    assert ss["pp_span_time"] <= ss["busy_time"]
+    assert slow.parallel_summary()["bubble_fraction"] == \
+        pytest.approx(base.parallel_summary()["bubble_fraction"])
+
+
+def test_parallel_stats_absent_without_pp():
+    res = simulate(SimSpec(workload=_fixed_wl(4)))
+    assert res.parallel_stats is None
+    assert res.parallel_summary()["bubble_fraction"] == 0.0
+
+
+def test_replicas_clone_worker_set():
+    sim = Simulation(SimSpec(workload=_fixed_wl(8),
+                             workers=[WorkerSpec(), WorkerSpec()],
+                             parallel=ParallelSpec(replicas=3)))
+    assert len(sim.workers) == 6
+    res = sim.run()
+    assert len(res.finished) == 8
+    assert len({r.worker_id for r in res.finished}) > 1
+
+
+def test_replicas_scale_throughput():
+    wl = WorkloadSpec(num_requests=64, qps=0.0, seed=0,
+                      lengths="fixed", prompt_len=128, output_len=32)
+    one = simulate(SimSpec(workload=wl))
+    four = simulate(SimSpec(workload=wl,
+                            parallel=ParallelSpec(replicas=4)))
+    assert four.throughput() > 1.5 * one.throughput()
+
+
+def test_pp_scales_kv_capacity():
+    base = Simulation(SimSpec(workload=_fixed_wl(2)))
+    pp = Simulation(SimSpec(workload=_fixed_wl(2),
+                            parallel=ParallelSpec(pp=4),
+                            cluster="dgx-a100"))
+    nb_base = base.workers[0].mem.mc.num_blocks
+    nb_pp = pp.workers[0].mem.mc.num_blocks
+    # 4 devices' HBM minus one weight copy > 4x the single-device pool
+    assert nb_pp > 4 * nb_base
+
+
+def test_worker_tp_override_wins():
+    sim = Simulation(SimSpec(
+        workload=_fixed_wl(2),
+        workers=[WorkerSpec(tp=8), WorkerSpec()],
+        parallel=ParallelSpec(tp=2), cluster="dgx-a100"))
+    assert sim.workers[0].backend.graph.tp == 8
+    assert sim.workers[1].backend.graph.tp == 2
+
+
+def test_tp_composes_with_swap_and_prefix_sharing():
+    """Parallelism must not disturb the memory subsystems: a TP+PP sim
+    with swap preemption and prefix sharing still drains."""
+    wl = WorkloadSpec(num_requests=12, qps=0.0, seed=0, lengths="fixed",
+                      prompt_len=96, output_len=24,
+                      shared_prefix_len=64, shared_prefix_groups=2)
+    res = simulate(SimSpec(
+        workload=wl, parallel=ParallelSpec(tp=2, pp=2, microbatches=2),
+        cluster="dgx-a100", preemption_mode="swap", prefix_sharing=True))
+    assert len(res.finished) == 12
+    assert res.memory_summary()["shared_tokens"] > 0
