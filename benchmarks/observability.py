@@ -1,0 +1,170 @@
+"""Observability pipeline gate (docs/OBSERVABILITY.md).
+
+Exercises the full ``repro.obs`` stack on a memory-pressured TP=2
+cluster and on a pipeline-parallel (pp=2) worker, then checks the
+exported artifacts against their contracts:
+
+* the Chrome trace-event JSON is well-formed, request spans nest and
+  are contiguous, and per-request span durations sum to the measured
+  latency (``validate_chrome_trace`` returns no errors);
+* latency attribution conserves: per request, the TTFT components sum
+  to the measured TTFT and the decode components to the measured
+  decode span within 1e-6 s — in exact mode and in streaming
+  drop-mode (``retain_requests=False``);
+* the time-series recorder stays within its row cap (stride-doubling
+  decimation).
+
+``run_smoke()`` (``--smoke``, wired into scripts/ci.sh) runs the same
+checks on a smaller sim and leaves ``results/obs/trace.json`` for CI
+to upload as an artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.configs import get_config
+from repro.core.costmodel.operators import kv_bytes_per_token, param_bytes
+from repro.core.simulator import (ParallelSpec, SimSpec, Simulation,
+                                  WorkerSpec)
+from repro.core.workload import WorkloadSpec
+from repro.obs import ObsSpec, validate_chrome_trace
+
+from benchmarks.common import Bench, fmt
+
+OUT_DIR = os.path.join("results", "obs")
+#: per-request conservation tolerance (seconds) — the acceptance bar
+EPS = 1e-6
+
+
+def _pressure_spec(n: int = 64, *, tp: int = 2, cap_interval: float = 0.5,
+                   ts_cap: int = 4096) -> SimSpec:
+    """TP-sharded variant of the benchmarks/kv_hierarchy.py pressure
+    recipe: a KV pool holding ~10 prompts, so decode growth swaps."""
+    cfg = get_config("llama2-7b")
+    kvt = kv_bytes_per_token(cfg, 2, tp)
+    ctx, out = 1024, 192
+    cap = (param_bytes(cfg, 2, tp) + (10 * ctx + 4 * out) * kvt) / 0.9
+    return SimSpec(
+        arch="llama2-7b",
+        workers=[WorkerSpec(hw="A100", tp=tp, mem_cap_override=cap)
+                 for _ in range(2)],
+        workload=WorkloadSpec(num_requests=n, qps=0.0, seed=0,
+                              lengths="fixed", prompt_len=ctx,
+                              output_len=out),
+        local_policy="continuous", preemption_mode="swap",
+        obs=ObsSpec.full(sample_interval=cap_interval,
+                         timeseries_cap=ts_cap))
+
+
+def _pp_spec(n: int = 32) -> SimSpec:
+    """pp=2 roofline worker: the only backend that reports comm/bubble
+    in ``IterationPlan``, so attribution shows those components."""
+    return SimSpec(
+        arch="llama2-7b", backend="roofline",
+        workers=[WorkerSpec(hw="A100")],
+        parallel=ParallelSpec(pp=2, microbatches=4),
+        workload=WorkloadSpec(num_requests=n, qps=4.0, seed=1,
+                              lengths="fixed", prompt_len=512,
+                              output_len=64),
+        obs=ObsSpec.full())
+
+
+def _conservation_errors(res) -> float:
+    """Worst per-request |sum(components) - measured span| in seconds."""
+    worst = 0.0
+    for r in res.finished:
+        f = r.obs.final
+        ttft = r.t_first_token - r.arrival_time
+        worst = max(worst, abs(sum(f["ttft"].values()) - ttft))
+        if r.t_finish is not None and r.t_first_token is not None:
+            dec = r.t_finish - r.t_first_token
+            worst = max(worst, abs(sum(f["decode"].values()) - dec))
+    return worst
+
+
+def _check(res, *, trace_path: str) -> dict:
+    res.export_trace(trace_path)
+    with open(trace_path) as f:
+        data = json.load(f)
+    errors = validate_chrome_trace(data)
+    assert not errors, f"trace invalid: {errors[:5]}"
+    worst = _conservation_errors(res)
+    assert worst < EPS, f"attribution not conserved: {worst:.3e}s"
+    n_rows = len(res.timeseries.rows())
+    assert n_rows <= res.timeseries.cap, \
+        f"timeseries unbounded: {n_rows} > cap {res.timeseries.cap}"
+    return {"events": len(data["traceEvents"]), "ts_rows": n_rows,
+            "conservation_err": worst}
+
+
+def run(quick: bool = False) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    b = Bench("observability")
+
+    res = Simulation(_pressure_spec(32 if quick else 64)).run()
+    info = _check(res, trace_path=os.path.join(OUT_DIR, "trace.json"))
+    mem = res.memory_summary()
+    assert mem["swap_preempts"] > 0, "pressure sim produced no swaps"
+    bd = res.time_breakdown()
+    assert bd["mode"] == "exact" and "swap" in bd["ttft_mean"] | \
+        bd["decode_mean"], bd
+    b.add(case="pressure_tp2", requests=len(res.finished),
+          swap_preempts=mem["swap_preempts"],
+          trace_events=info["events"], ts_rows=info["ts_rows"],
+          conservation_err=fmt(info["conservation_err"], 9))
+
+    pp = Simulation(_pp_spec(16 if quick else 32)).run()
+    info = _check(pp, trace_path=os.path.join(OUT_DIR, "trace_pp2.json"))
+    bd = pp.time_breakdown()
+    assert "comm" in bd["decode_mean"] and "bubble" in bd["decode_mean"], \
+        f"pp=2 attribution missing comm/bubble: {sorted(bd['decode_mean'])}"
+    b.add(case="pipeline_pp2", requests=len(pp.finished),
+          trace_events=info["events"], ts_rows=info["ts_rows"],
+          conservation_err=fmt(info["conservation_err"], 9))
+    b.finish(derived="trace_valid_attribution_conserved_1e-6")
+
+
+def run_smoke(n: int = 48) -> None:
+    """CI gate: trace schema + span nesting + attribution conservation
+    + bounded time series, artifact at results/obs/trace.json."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    res = Simulation(_pressure_spec(n, ts_cap=256)).run()
+    info = _check(res, trace_path=os.path.join(OUT_DIR, "trace.json"))
+
+    # streaming drop-mode attribution still folds and conserves in the
+    # aggregate (per-request objects are gone by design)
+    from dataclasses import replace
+    spec = replace(_pressure_spec(n, ts_cap=256),
+                   streaming=True, retain_requests=False)
+    stream = Simulation(spec).run()
+    sb, eb = stream.time_breakdown(), res.time_breakdown()
+    assert sb["mode"] == "streaming" and sb["n"] == eb["n"], (sb, eb)
+    for comp, v in eb["ttft_mean"].items():
+        assert abs(sb["ttft_mean"][comp] - v) < 1e-9, (comp, sb, eb)
+    print(f"observability_smoke,OK,n={n},trace_events={info['events']},"
+          f"ts_rows={info['ts_rows']},"
+          f"conservation_err={info['conservation_err']:.3e}")
+    b = Bench("observability_smoke")
+    b.add(n=n, trace_events=info["events"], ts_rows=info["ts_rows"],
+          conservation_err=fmt(info["conservation_err"], 9))
+    b.finish(derived=f"trace_valid_err<{EPS}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: schema + conservation + bounded rows")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        run_smoke()
+    else:
+        run(quick=args.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,7 +27,8 @@ NON_BENCHMARKS = {"common", "run", "finalize_docs", "roofline_report",
                   "perf_hillclimb"}
 #: benchmarks scripts/ci.sh runs as `--smoke` CI gates; each must expose
 #: main(argv) handling "--smoke"
-SMOKE_GATED = {"sim_speed", "kv_hierarchy", "parallelism"}
+SMOKE_GATED = {"sim_speed", "kv_hierarchy", "parallelism",
+               "observability"}
 
 
 def discover_modules() -> set:
@@ -81,9 +82,9 @@ def main(argv=None):
 
     from benchmarks import (batching, disagg_ratio, disagg_validation,
                             hardware_sub, kv_hierarchy, mem_footprint,
-                            memcache, memratio, parallelism,
-                            platform_sweep, sim_speed, spec_decode,
-                            tenant_qos, validation)
+                            memcache, memratio, observability,
+                            parallelism, platform_sweep, sim_speed,
+                            spec_decode, tenant_qos, validation)
 
     benches = [
         ("validation", lambda: validation.run(n_req=20 if q else 40)),
@@ -104,6 +105,7 @@ def main(argv=None):
         ("spec_decode", lambda: spec_decode.run(quick=q)),
         ("kv_hierarchy", lambda: kv_hierarchy.run(quick=q)),
         ("parallelism", lambda: parallelism.run(quick=q)),
+        ("observability", lambda: observability.run(quick=q)),
     ]
     errors = check_registry({name for name, _ in benches})
     for e in errors:

@@ -154,6 +154,74 @@ def run_scaling(request_counts=(10_000, 100_000, 1_000_000),
                      f"{n_workers}workers_bounded_live")
 
 
+def run_obs_overhead(n: int = 4000, n_workers: int = 4, reps: int = 5,
+                     disabled_budget: float = 1.02,
+                     full_budget: float = 1.10, retries: int = 1):
+    """Observability overhead gate (docs/OBSERVABILITY.md): the same
+    sim with obs absent, obs constructed-but-disabled, and full
+    tracing+timeseries+attribution.  Disabled must cost <2% and full
+    <10% over the baseline CPU time.
+
+    Methodology: a saturated batch (all arrivals at t=0, full
+    ``max_batch`` occupancy) is the steady-state-serving shape the
+    overhead contract is stated for — per-iteration recording
+    amortizes over the whole batch there.  Degenerate workloads with
+    single-digit batches pay proportionally more (recording cost is
+    per event, the sim's cost per event is tiny).  Configs are timed
+    in interleaved rounds, comparing per-config *medians* of CPU time
+    (``process_time``, immune to scheduler preemption) with the GC
+    parked during each run — allocation-triggered gen-2 collections
+    scan the whole heap and land on whichever config happens to trip
+    the threshold, which is variance, not overhead.  Identical
+    configs land within ~1.5% under this protocol (single runs swing
+    +/-20% on shared CI hosts); a failing comparison re-measures once
+    before failing the gate."""
+    import gc
+    import statistics
+    from dataclasses import replace
+
+    from repro.obs import ObsSpec
+
+    base_spec = SimSpec(
+        arch="llama2-7b",
+        workers=[WorkerSpec() for _ in range(n_workers)],
+        workload=WorkloadSpec(num_requests=n, qps=0.0, seed=7,
+                              lengths="fixed", prompt_len=64,
+                              output_len=64),
+        max_batch=128, streaming=True, retain_requests=False)
+    cfgs = [("base", base_spec),
+            ("disabled", replace(base_spec, obs=ObsSpec())),
+            ("full", replace(base_spec, obs=ObsSpec.full()))]
+
+    for attempt in range(retries + 1):
+        walls = {name: [] for name, _ in cfgs}
+        for _ in range(reps):
+            for name, spec in cfgs:
+                gc.collect()
+                gc.disable()
+                try:
+                    t0 = time.process_time()
+                    Simulation(spec).run()
+                    walls[name].append(time.process_time() - t0)
+                finally:
+                    gc.enable()
+        base = statistics.median(walls["base"])
+        r_off = statistics.median(walls["disabled"]) / base
+        r_full = statistics.median(walls["full"]) / base
+        if r_off < disabled_budget and r_full < full_budget:
+            break
+    assert r_off < disabled_budget, \
+        f"disabled-obs overhead {r_off:.3f}x >= {disabled_budget}x"
+    assert r_full < full_budget, \
+        f"full-obs overhead {r_full:.3f}x >= {full_budget}x"
+    print(f"obs_overhead,OK,n={n},base={base:.2f}s,"
+          f"disabled={r_off:.3f}x,full={r_full:.3f}x")
+    b = Bench("sim_speed_obs_overhead")
+    b.add(n=n, base_cpu_s=fmt(base, 3), disabled_x=fmt(r_off, 3),
+          full_x=fmt(r_full, 3))
+    b.finish(derived=f"disabled={r_off:.3f}x_full={r_full:.3f}x")
+
+
 def run_smoke(n: int = 10_000, n_workers: int = 8, qps: float = 1000.0,
               wall_budget_s: float = 60.0, rss_budget_mb: float = 1024.0):
     """CI gate (scripts/ci.sh): streaming 10k run within a time/RSS
@@ -190,6 +258,7 @@ def run_smoke(n: int = 10_000, n_workers: int = 8, qps: float = 1000.0,
     b.add(n=n, wall_s=fmt(wall, 2), rss_mb=fmt(rss, 1),
           max_live=stream.max_live, p99_rel_err=fmt(p99_err, 6))
     b.finish(derived=f"wall={wall:.1f}s_rss={rss:.0f}MB")
+    run_obs_overhead()
 
 
 def main(argv=None) -> int:

@@ -18,7 +18,11 @@ Checks:
      (same doc-drift guard for the memory subsystem),
   5. every ``ParallelSpec`` field and every ``CLUSTERS`` / ``LINKS``
      hardware entry appears as a code-span in docs/PARALLELISM.md —
-     new parallelism knobs or topology presets without docs fail CI.
+     new parallelism knobs or topology presets without docs fail CI,
+  6. every ``HOOK_POINTS`` breakpoint, attribution ``COMPONENTS``
+     name, trace ``SPAN_PHASES`` name and time-series ``TS_FIELDS``
+     column appears as a code-span in docs/OBSERVABILITY.md — new
+     observability surface without docs fails CI.
 
 Run:  python scripts/check_docs.py        (exits non-zero on failure)
 """
@@ -171,6 +175,32 @@ def check_parallelism_docs() -> list:
     return errors
 
 
+def check_observability_docs() -> list:
+    """Every hook point, attribution component, trace span phase and
+    time-series field must be documented as a `code span` in
+    docs/OBSERVABILITY.md."""
+    from repro.core.breakpoints import HOOK_POINTS
+    from repro.obs import COMPONENTS, SPAN_PHASES, TS_FIELDS
+
+    errors = []
+    path = os.path.join(ROOT, "docs", "OBSERVABILITY.md")
+    if not os.path.exists(path):
+        return ["docs/OBSERVABILITY.md: missing (observability doc "
+                "coverage needs it)"]
+    with open(path) as f:
+        text = f.read()
+    groups = [("hook point", HOOK_POINTS),
+              ("attribution component", COMPONENTS),
+              ("trace span phase", SPAN_PHASES),
+              ("time-series field", TS_FIELDS)]
+    for what, names in groups:
+        for n in names:
+            if f"`{n}`" not in text and f'`"{n}"`' not in text:
+                errors.append(f"{what} `{n}` not documented in "
+                              f"docs/OBSERVABILITY.md")
+    return errors
+
+
 def main() -> int:
     errors = []
     docs = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
@@ -183,14 +213,15 @@ def main() -> int:
     errors.extend(check_registry_docs())
     errors.extend(check_memory_docs())
     errors.extend(check_parallelism_docs())
+    errors.extend(check_observability_docs())
     for e in errors:
         print(f"docs-check FAIL: {e}")
     if not errors:
         n = len(docs) + 1
         print(f"docs-check OK: {n} markdown files, links + anchors resolve, "
               f"all benchmarks/examples have module docstrings, all "
-              f"policies/workload kinds and memory/parallelism registries "
-              f"documented")
+              f"policies/workload kinds and memory/parallelism/"
+              f"observability registries documented")
     return 1 if errors else 0
 
 

@@ -65,11 +65,13 @@ stage "smoke: examples/multi_tenant.py (<30s)" \
 stage "smoke: examples/speculative.py (<30s)" \
     bash -c 'timeout 30 python examples/speculative.py > /dev/null'
 
-# outer timeout covers the exact-mode baseline + the streaming run;
-# the benchmark's internal 60s wall budget covers the streaming run only
-stage "smoke: sim_speed streaming scale gate (10k requests)" \
+# outer timeout covers the exact-mode baseline + the streaming run +
+# the observability overhead gate (interleaved timed rounds, with a
+# retry); the benchmark's internal 60s wall budget covers the
+# streaming run only
+stage "smoke: sim_speed streaming scale + obs overhead gates" \
     env PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
-    timeout 240 python benchmarks/sim_speed.py --smoke
+    timeout 420 python benchmarks/sim_speed.py --smoke
 
 # (a) swap preemption must drain a 95%-memory-pressure workload without
 # deadlocking; (b) prefix sharing must be byte-identical to non-shared
@@ -85,3 +87,11 @@ stage "smoke: kv_hierarchy memory gates" \
 stage "smoke: parallelism crossover + bubble gates" \
     env PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     timeout 300 python benchmarks/parallelism.py --smoke
+
+# observability gates (docs/OBSERVABILITY.md): exported Chrome trace
+# validates (spans nest, durations sum to latency within 1e-6),
+# attribution conserves in exact and streaming drop-mode, time series
+# stays bounded; leaves results/obs/trace.json for the CI artifact
+stage "smoke: observability trace + attribution gates" \
+    env PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    timeout 120 python benchmarks/observability.py --smoke

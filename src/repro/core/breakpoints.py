@@ -16,27 +16,41 @@ Hook points (args):
 """
 from __future__ import annotations
 
-from collections import defaultdict
-from typing import Callable, DefaultDict, List
+from typing import Callable, Dict, List
 
+#: the seven breakpoints; each is fired by the worker loop (see the
+#: module docstring for arguments) and audited ≥1-fire by
+#: tests/test_observability.py.  scripts/check_docs.py asserts each
+#: name is documented in docs/OBSERVABILITY.md
 HOOK_POINTS = ("before_sched", "on_admit", "after_prefill",
                "on_first_token", "after_token", "after_iteration",
                "on_finish")
 
 
 class Hooks:
+    """Breakpoint registry with an O(1) empty fast path: ``fire`` on a
+    point with no callbacks is a plain dict miss — no list is allocated
+    or inserted (the previous defaultdict grew one empty list per
+    distinct miss), so the worker's per-token hot loop pays nothing
+    when observability is off."""
+
+    __slots__ = ("_hooks",)
+
     def __init__(self):
-        self._hooks: DefaultDict[str, List[Callable]] = defaultdict(list)
+        self._hooks: Dict[str, List[Callable]] = {}
 
     def on(self, point: str, fn: Callable) -> "Hooks":
         if point not in HOOK_POINTS:
             raise KeyError(f"unknown breakpoint {point!r}; "
                            f"have {HOOK_POINTS}")
-        self._hooks[point].append(fn)
+        self._hooks.setdefault(point, []).append(fn)
         return self
 
     def fire(self, point: str, *args) -> None:
-        for fn in self._hooks[point]:
+        fns = self._hooks.get(point)
+        if fns is None:
+            return
+        for fn in fns:
             fn(*args)
 
 

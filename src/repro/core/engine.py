@@ -9,6 +9,14 @@ tie-breaking**.  Events scheduled for the same simulated time fire in
 increasing counter — so a simulation is a pure function of its inputs,
 which the validation tests (structural trace equality vs. the real engine)
 rely on.
+
+**Daemon events** (beyond the SimPy subset): events scheduled with
+``daemon=True`` do not keep the simulation alive — ``run()`` exits once
+only daemon events remain in the heap.  This is how the observability
+sampler (repro.obs) ticks periodically without extending the
+simulation: its wake-ups fire while real work is pending and evaporate
+with it.  All pre-existing events are non-daemon, so simulations
+without daemon users are untouched.
 """
 from __future__ import annotations
 
@@ -68,13 +76,13 @@ class Event:
 
 class Timeout(Event):
     def __init__(self, env: "Environment", delay: float, value: Any = None,
-                 priority: int = NORMAL):
+                 priority: int = NORMAL, *, daemon: bool = False):
         super().__init__(env)
         if delay < 0:
             raise ValueError(f"negative delay {delay}")
         self.triggered = True
         self._value = value
-        env._schedule(self, delay, priority)
+        env._schedule(self, delay, priority, daemon)
 
 
 class Process(Event):
@@ -82,11 +90,12 @@ class Process(Event):
 
     __slots__ = ("gen", "name")
 
-    def __init__(self, env: "Environment", gen: Generator, name: str = ""):
+    def __init__(self, env: "Environment", gen: Generator, name: str = "",
+                 daemon: bool = False):
         super().__init__(env)
         self.gen = gen
         self.name = name or getattr(gen, "__name__", "proc")
-        init = Timeout(env, 0.0, priority=URGENT)
+        init = Timeout(env, 0.0, priority=URGENT, daemon=daemon)
         init.callbacks.append(self._resume)
 
     def _resume(self, trigger: Event):
@@ -138,28 +147,39 @@ class Environment:
         self.now: float = 0.0
         self._heap: List = []
         self._seq = itertools.count()
+        #: pending non-daemon events; run() exits when this hits zero
+        self._live = 0
 
-    def _schedule(self, event: Event, delay: float, priority: int = NORMAL):
+    def _schedule(self, event: Event, delay: float, priority: int = NORMAL,
+                  daemon: bool = False):
+        if not daemon:
+            self._live += 1
+        # seq is globally unique, so the daemon flag is never compared
         heapq.heappush(self._heap,
-                       (self.now + delay, priority, next(self._seq), event))
+                       (self.now + delay, priority, next(self._seq),
+                        daemon, event))
 
     # -- SimPy-compatible surface ---------------------------------------
-    def timeout(self, delay: float, value: Any = None) -> Timeout:
-        return Timeout(self, delay, value)
+    def timeout(self, delay: float, value: Any = None, *,
+                daemon: bool = False) -> Timeout:
+        return Timeout(self, delay, value, daemon=daemon)
 
     def event(self) -> Event:
         return Event(self)
 
-    def process(self, gen: Generator, name: str = "") -> Process:
-        return Process(self, gen, name)
+    def process(self, gen: Generator, name: str = "",
+                daemon: bool = False) -> Process:
+        return Process(self, gen, name, daemon)
 
     def run(self, until: Optional[float] = None) -> None:
-        while self._heap:
-            t, _, _, event = self._heap[0]
+        while self._heap and self._live:
+            t, _, _, daemon, event = self._heap[0]
             if until is not None and t > until:
                 self.now = until
                 return
             heapq.heappop(self._heap)
+            if not daemon:
+                self._live -= 1
             self.now = t
             event.processed = True
             callbacks, event.callbacks = event.callbacks, []

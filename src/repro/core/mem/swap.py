@@ -66,6 +66,10 @@ class SwapManager:
         self.bytes_out = 0.0
         self.bytes_in = 0.0
         self.fallbacks = 0               # host full: recompute instead
+        #: observability tap (repro.obs): when set, called as
+        #: on_event(kind, req_id, tokens, nbytes) for every swap_out /
+        #: swap_in so the trace can mark transfers on the worker lane
+        self.on_event = None
 
     # -- cost model -------------------------------------------------------
     def bytes_for(self, tokens: int) -> float:
@@ -103,6 +107,8 @@ class SwapManager:
         self.peak_used_bytes = max(self.peak_used_bytes, self.used_bytes)
         self.swap_out_events += 1
         self.bytes_out += nbytes
+        if self.on_event is not None:
+            self.on_event("swap_out", req.id, tokens, nbytes)
         return self.transfer_time(tokens)
 
     def swap_in(self, req: Request) -> float:
@@ -112,6 +118,8 @@ class SwapManager:
         self.used_bytes -= nbytes
         self.swap_in_events += 1
         self.bytes_in += nbytes
+        if self.on_event is not None:
+            self.on_event("swap_in", req.id, tokens, nbytes)
         return self.transfer_time(tokens)
 
     def drop(self, req: Request) -> int:

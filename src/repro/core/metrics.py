@@ -211,6 +211,11 @@ class StreamingStats:
         self.swap_ins = 0
         self.shared_tokens = 0
         self.cow_copies = 0
+        #: latency-attribution sums (docs/OBSERVABILITY.md): per-
+        #: component totals of the finalized TTFT / decode / per-token
+        #: breakdowns, folded at retire time so drop-mode keeps the
+        #: conserved decomposition without retaining requests
+        self.attrib = {"n": 0, "ttft": {}, "decode": {}, "tpot": {}}
         self._tenant_slos = tenant_slos or {}
         self.tenants: Dict[str, "StreamingStats"] = {}
 
@@ -237,6 +242,19 @@ class StreamingStats:
         self.swap_ins += req.swap_in_count
         self.shared_tokens += req.shared_tokens
         self.cow_copies += req.cow_copies
+        ro = getattr(req, "obs", None)
+        if ro is not None and ro.final is not None:
+            a = self.attrib
+            a["n"] += 1
+            f = ro.final
+            t = a["ttft"]
+            for k, v in f["ttft"].items():
+                t[k] = t.get(k, 0.0) + v
+            d, tp = a["decode"], a["tpot"]
+            scale = 1.0 / max(1, f["tokens"] - 1)
+            for k, v in f["decode"].items():
+                d[k] = d.get(k, 0.0) + v
+                tp[k] = tp.get(k, 0.0) + v * scale
         if req.rejected or req.t_finish is None:
             self.n_rejected += 1
             return
@@ -302,6 +320,10 @@ class Results:
     stats: Optional[StreamingStats] = None
     #: peak simultaneously-live Request objects (streaming memory model)
     max_live: int = 0
+    #: repro.obs.TraceRecorder when the sim ran with ObsSpec(trace=True)
+    trace: Optional[object] = field(default=None, repr=False)
+    #: repro.obs.TimeSeriesRecorder when ObsSpec(timeseries=True)
+    timeseries: Optional[object] = field(default=None, repr=False)
     #: per-Results caches: finished list and sorted metric lists are
     #: computed once (the repeated-full-sort fix); safe because Results
     #: is read after the simulation has finished mutating requests
@@ -384,6 +406,41 @@ class Results:
         span = max(r.t_finish for r in self.finished) - \
             min(r.arrival_time for r in self.finished)
         return len(ok) / max(span, 1e-9)
+
+    # ---- observability (repro.obs, docs/OBSERVABILITY.md) -------------
+    def export_trace(self, path: str) -> str:
+        """Write the Chrome trace-event JSON (Perfetto-loadable)."""
+        if self.trace is None:
+            raise ValueError("tracing was not enabled: run with "
+                             "SimSpec(obs=ObsSpec(trace=True))")
+        return self.trace.export(path)
+
+    def export_timeseries(self, path: str) -> str:
+        """Write the sampled time series; ``.json`` suffix selects JSON,
+        anything else CSV."""
+        if self.timeseries is None:
+            raise ValueError("time series was not enabled: run with "
+                             "SimSpec(obs=ObsSpec(timeseries=True))")
+        if path.endswith(".json"):
+            return self.timeseries.export_json(path)
+        return self.timeseries.export_csv(path)
+
+    def time_breakdown(self) -> dict:
+        """Mean (and, in exact mode, P99-tail) decomposition of TTFT,
+        decode-phase and per-token latency into attribution components
+        (repro.obs.attribution.COMPONENTS).  Requires the sim to have
+        run with ``ObsSpec(attribution=True)``; works in streaming
+        drop-mode via the sums folded into ``StreamingStats``."""
+        from repro.obs.attribution import (aggregate_exact,
+                                           aggregate_streaming)
+        if self.stats is not None and self.stats.attrib["n"]:
+            return aggregate_streaming(self.stats.attrib)
+        return aggregate_exact(self.finished)
+
+    def explain(self) -> str:
+        """``time_breakdown()`` rendered as a table."""
+        from repro.obs.attribution import format_breakdown
+        return format_breakdown(self.time_breakdown())
 
     def preemption_rate(self) -> float:
         if self.stats is not None:

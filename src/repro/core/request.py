@@ -66,6 +66,11 @@ class Request:
     swap_out_count: int = 0              # preemptions taken in swap mode
     swap_in_count: int = 0               # host->device restores
 
+    #: latency-attribution banks (repro.obs.attribution.RequestObs),
+    #: attached lazily by the observability layer when
+    #: SimSpec(obs=ObsSpec(attribution=True)); None otherwise
+    obs: Optional[object] = field(default=None, repr=False)
+
     # incremental worker-load accounting (core.worker): the exact amount
     # this request last charged against its worker's waiting/running
     # load, so dequeue/finish can reverse it in O(1)

@@ -37,6 +37,22 @@ class GlobalScheduler:
         with the dispatch-side record book."""
         return None
 
+    # ---- observability (repro.obs) -----------------------------------
+    def observe_assign(self, req: Request, wid: int) -> None:
+        """Record one dispatch decision in a per-worker record book the
+        time-series recorder samples (load-balance observability).  The
+        Simulation calls this only when observability is enabled, so
+        the default dispatch path stays untouched."""
+        book = getattr(self, "_assign_book", None)
+        if book is None:
+            book = self._assign_book = {}
+        book[wid] = book.get(wid, 0) + 1
+
+    def assign_counts(self) -> Dict[int, int]:
+        """Cumulative dispatches per worker id (empty when observability
+        never recorded any)."""
+        return dict(getattr(self, "_assign_book", None) or {})
+
 
 def _eligible(workers, *, prefill=None, decode=None):
     out = []

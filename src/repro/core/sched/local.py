@@ -35,6 +35,10 @@ class IterationPlan:
     #: p2p activation-transfer time of this iteration
     pp_bubble: float = 0.0
     comm_latency: float = 0.0
+    #: speculative-decode draft-model time of this iteration, filled by
+    #: the worker after costing (slowdown-scaled like the billed time) —
+    #: the draft/verify split the attribution layer reports
+    draft_latency: float = 0.0
 
     @property
     def empty(self) -> bool:

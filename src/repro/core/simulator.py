@@ -73,6 +73,7 @@ from repro.core.tenancy import AdmissionController, TenantSpec
 from repro.core.worker import Worker
 from repro.core.workload import (WorkloadSpec, generate, generate_multi,
                                  make_source, make_tenant_source)
+from repro.obs import ObsRecorder, ObsSpec
 
 
 @dataclass(frozen=True)
@@ -172,6 +173,11 @@ class SimSpec:
     #: works with retain_requests=False (per-tenant SLOs come from the
     #: tenant tiers automatically)
     streaming_slo: Optional[tuple] = None
+    #: observability (docs/OBSERVABILITY.md): request-lifecycle tracing
+    #: (Chrome trace-event export), bounded time-series sampling, and
+    #: latency attribution.  None (default) is the zero-cost path: no
+    #: recorder objects exist and every tap is a single is-None check
+    obs: Optional[ObsSpec] = None
 
 
 class Simulation:
@@ -203,6 +209,11 @@ class Simulation:
                 tenant_slos=tenant_slos)
         self._n_live = 0
         self.max_live = 0
+        #: observability hub; built before the workers so install() can
+        #: register its breakpoint hooks on each one
+        self.obs: Optional[ObsRecorder] = \
+            ObsRecorder(spec.obs) \
+            if spec.obs is not None and spec.obs.enabled else None
         self.global_sched: GlobalScheduler = make_global_scheduler(
             spec.global_policy, **spec.global_policy_kw)
         self.admission: Optional[AdmissionController] = \
@@ -315,8 +326,11 @@ class Simulation:
                        enc_tokens_per_req=enc_tokens,
                        discipline=self.global_sched.discipline(),
                        spec_decode=spec.spec_decode,
-                       draft_backend=draft_backend, swap=swap)
+                       draft_backend=draft_backend, swap=swap,
+                       obs=self.obs)
             w.slowdown = ws.slowdown
+            if self.obs is not None:
+                self.obs.install(w)
             self.workers.append(w)
 
     # ------------------------------------------------------------------
@@ -332,9 +346,16 @@ class Simulation:
             state_bytes_per_seq(self.cfg, self.spec.dtype_bytes)
         done = self.link.transfer(nbytes)
         target = self.workers[target_id]
+        obs = self.obs
+        if obs is not None:
+            self.global_sched.observe_assign(req, target_id)
+        t_start = self.env.now
 
         def on_done(_ev, req=req, fw=from_worker, tw=target):
             fw.release(req)
+            if obs is not None:
+                obs.on_migrate_done(req, self.env.now,
+                                    self.env.now - t_start)
             tw.receive_migrated(req)
 
         done.wait(on_done)
@@ -342,6 +363,10 @@ class Simulation:
     def on_request_finished(self, req: Request) -> None:
         self._n_finished += 1
         self._n_live -= 1
+        if self.obs is not None:
+            # derive the conserved component breakdown while the
+            # timestamps are final, before any streaming fold drops it
+            self.obs.finalize(req)
         if self.admission is not None:
             self.admission.on_finish(req)
         if self.stats is not None:
@@ -354,12 +379,19 @@ class Simulation:
         """Admission control dropped the request (429): account for it
         so streaming mode can forget it."""
         self._n_live -= 1
+        if self.obs is not None:
+            self.obs.on_reject(req, self.env.now)
         if self.stats is not None:
             self.stats.fold(req)
 
     def redispatch(self, orphans: List[Request]) -> None:
+        obs = self.obs
         for req in sorted(orphans, key=lambda r: r.id):
+            if obs is not None:
+                obs.on_requeue(req, self.env.now)
             wid = self.global_sched.assign(req, self.workers)
+            if obs is not None:
+                self.global_sched.observe_assign(req, wid)
             self.workers[wid].submit(req)
 
     # ------------------------------------------------------------------
@@ -367,6 +399,7 @@ class Simulation:
         env = self.env
         streaming = self.source is not None
         retain = self.spec.retain_requests
+        obs = self.obs
         it = self.source if streaming else self.requests
         for req in it:
             if streaming and retain:
@@ -377,10 +410,14 @@ class Simulation:
             self._n_live += 1
             if self._n_live > self.max_live:
                 self.max_live = self._n_live
+            if obs is not None:
+                obs.on_arrival(req, gated=self.admission is not None)
             if self.admission is not None:
                 self.admission.submit(req)
             else:
                 wid = self.global_sched.assign(req, self.workers)
+                if obs is not None:
+                    self.global_sched.observe_assign(req, wid)
                 self.workers[wid].submit(req)
 
     def _fault_injector(self):
@@ -402,13 +439,46 @@ class Simulation:
                 raise ValueError(f.kind)
 
     # ------------------------------------------------------------------
+    def _sampler(self):
+        """Periodic time-series tick.  A daemon process: its timeouts
+        never keep the simulation alive, so sampling neither extends
+        ``sim_time`` nor prevents ``env.run()`` from terminating."""
+        env = self.env
+        while True:
+            yield env.timeout(self.obs.ts.interval, daemon=True)
+            self._sample_obs(env.now)
+
+    def _sample_obs(self, now: float) -> None:
+        obs = self.obs
+        extra = {"n_live": self._n_live, "n_finished": self._n_finished,
+                 "n_rejected": sum(self.admission.rejected.values())
+                 if self.admission is not None else 0,
+                 "assigns": self.global_sched.assign_counts()}
+        cluster = obs.ts.sample(now, self.workers, extra)
+        if obs.trace is not None:
+            obs.trace.counter("cluster", now, {
+                "queue_depth": cluster["queue_depth"],
+                "n_running": cluster["n_running"],
+                "kv_used_blocks": cluster["kv_used_blocks"]})
+
+    # ------------------------------------------------------------------
     def run(self) -> Results:
         t0 = _time.perf_counter()
         self.env.process(self._dispatcher(), name="dispatcher")
         if self.spec.faults:
             self.env.process(self._fault_injector(), name="faults")
+        if self.obs is not None and self.obs.ts is not None:
+            self.env.process(self._sampler(), name="obs-sampler",
+                             daemon=True)
         self.env.run(until=self.spec.until)
         wall = _time.perf_counter() - t0
+        if self.obs is not None:
+            if self.obs.ts is not None:
+                # closing frame at the horizon (also covers sims shorter
+                # than one sampling interval)
+                self._sample_obs(self.env.now)
+            if self.obs.trace is not None:
+                self.obs.trace.flush_open(self.env.now)
         requests = self.requests
         if self.stats is not None:
             # retired requests live only in the sketches; report the
@@ -443,7 +513,9 @@ class Simulation:
             if self.spec.parallel.pp > 1
             or any(w.pp_span_time for w in self.workers) else None,
             stats=self.stats,
-            max_live=self.max_live)
+            max_live=self.max_live,
+            trace=self.obs.trace if self.obs is not None else None,
+            timeseries=self.obs.ts if self.obs is not None else None)
 
 
 def simulate(spec: SimSpec) -> Results:

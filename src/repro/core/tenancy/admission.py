@@ -150,7 +150,16 @@ class AdmissionController:
 
     def _release(self, req: Request) -> None:
         req.t_admitted = self.env.now
-        wid = self.cluster.global_sched.assign(req, self.cluster.workers)
+        obs = getattr(self.cluster, "obs", None)
+        if obs is not None:
+            # gateway span ends here; the request enters a worker queue
+            obs.on_release(req, self.env.now)
+            wid = self.cluster.global_sched.assign(req,
+                                                   self.cluster.workers)
+            self.cluster.global_sched.observe_assign(req, wid)
+        else:
+            wid = self.cluster.global_sched.assign(req,
+                                                   self.cluster.workers)
         self.cluster.workers[wid].submit(req)
 
     def _wakeup(self, tid: str) -> None:

@@ -21,6 +21,7 @@ from repro.core.mem.memory_pool import MemoryPool
 from repro.core.mem.swap import SwapManager
 from repro.core.request import Request, State
 from repro.core.sched.local import IterationPlan, LocalScheduler
+from repro.obs.timeseries import BoundedSeries
 
 
 #: mem_timeline length at which the sampling stride doubles (bounds the
@@ -46,7 +47,8 @@ class Worker:
                  enc_tokens_per_req: int = 0,
                  discipline=None, spec_decode=None,
                  draft_backend: Optional[CostBackend] = None,
-                 swap: Optional[SwapManager] = None):
+                 swap: Optional[SwapManager] = None,
+                 obs=None):
         self.env = env
         self.wid = wid
         self.hw = hw
@@ -67,6 +69,9 @@ class Worker:
         #: host-DRAM KV tier (repro.core.mem.swap); when set, preemption
         #: swaps victims' KV out over PCIe instead of discarding it
         self.swap = swap
+        #: observability hub (repro.obs.ObsRecorder); None = all taps
+        #: collapse to one attribute load + is-None check per iteration
+        self.obs = obs
         self._spec_rng = spec_decode.rng_for_worker(wid) \
             if spec_decode is not None else None
 
@@ -74,12 +79,10 @@ class Worker:
         self.running: List[Request] = []
         self.alive = True
         self.slowdown = 1.0
-        self.mem_timeline: List[MemSample] = []
-        #: decimation stride for mem_timeline: doubled whenever the
-        #: timeline hits MEM_TIMELINE_CAP so memory stays bounded on
-        #: million-iteration runs (runs below the cap are unaffected)
-        self._mem_stride = 1
-        self._mem_tick = 0
+        #: memory-over-time samples under stride-doubling decimation
+        #: (repro.obs.timeseries.BoundedSeries): bounded on
+        #: million-iteration runs, every iteration below the cap
+        self._mem_series = BoundedSeries(MEM_TIMELINE_CAP)
         #: incrementally maintained load_tokens halves; each tracked
         #: request stores its charge so enqueue/dequeue stay O(1) even
         #: if its prefill/context state changes while tracked (e.g. a
@@ -88,6 +91,9 @@ class Worker:
         self._running_load = 0
         self.iterations = 0
         self.busy_time = 0.0
+        #: cheap cumulative counters the time-series recorder samples
+        self.tokens_emitted = 0
+        self.preempt_events = 0
         #: pipeline-parallel accounting (docs/PARALLELISM.md): cumulative
         #: fill/drain bubble, stage-boundary p2p comm, and pipeline span
         #: (step time x steps, framework overhead excluded) — so
@@ -97,6 +103,10 @@ class Worker:
         self.pp_span_time = 0.0
         self._wake: Optional[Event] = None
         self.proc = env.process(self._run(), name=f"worker{wid}")
+
+    @property
+    def mem_timeline(self) -> List[MemSample]:
+        return self._mem_series.rows
 
     # ------------------------------------------------------------------
     def _enqueue(self, req: Request, *, front: bool = False) -> None:
@@ -186,8 +196,12 @@ class Worker:
                 if self.discipline is not None:
                     self.discipline.on_service_start(req, env.now)
                 self.hooks.fire("on_admit", self, req)
+            obs = self.obs
             for req in plan.preempted:
                 req.state = State.PREEMPTED
+                self.preempt_events += 1
+                if obs is not None:
+                    obs.on_preempt(req, env.now)
                 if req in self.running:
                     self.running.remove(req)
                     self._uncharge_running(req)
@@ -230,11 +244,17 @@ class Worker:
             t = t_compute * self.slowdown \
                 + plan.retrieve_latency + plan.swap_latency
             if plan.spec_decode:
-                t += self._draft_time(plan.spec_decode) * self.slowdown
+                plan.draft_latency = \
+                    self._draft_time(plan.spec_decode) * self.slowdown
+                t += plan.draft_latency
             yield env.timeout(t)
             now = env.now
             self.iterations += 1
             self.busy_time += t
+            if obs is not None and obs.attribution:
+                # before token emission, so an iteration that produces
+                # the first token still banks on the TTFT side
+                obs.attribute(plan, t)
 
             # ---- apply effects ---------------------------------------
             for req, chunk, _ctx in plan.prefill:
@@ -248,16 +268,11 @@ class Worker:
             for req in plan.spec_decode:
                 self._apply_spec_step(req, now)
 
-            self._mem_tick += 1
-            if self._mem_tick % self._mem_stride == 0:
-                self.mem_timeline.append(MemSample(
+            ms = self._mem_series
+            if ms.should_record():
+                ms.append(MemSample(
                     now, self.mem.num_used, self.mem.used_bytes(),
                     len(self.running)))
-                if len(self.mem_timeline) >= MEM_TIMELINE_CAP:
-                    # drop odd indices so the t~0 sample survives every
-                    # halving (plots keep their simulation-start anchor)
-                    del self.mem_timeline[1::2]
-                    self._mem_stride *= 2
             self.hooks.fire("after_iteration", self, plan, t)
 
     # ------------------------------------------------------------------
@@ -291,6 +306,7 @@ class Worker:
     def _emit_token(self, req: Request, now: float) -> None:
         first = req.tokens_generated == 0
         req.tokens_generated += 1
+        self.tokens_emitted += 1
         req.token_times.append(now)
         c = 1 + req.context_len // 256
         if c != req._run_charge:

@@ -1,0 +1,405 @@
+"""Deep observability (repro.obs, docs/OBSERVABILITY.md): request
+lifecycle tracing, Chrome trace export, bounded time series, latency
+attribution — plus the breakpoint-registry fast path and the engine's
+daemon-event semantics the obs sampler rides on."""
+import json
+
+import pytest
+
+from repro.core.breakpoints import HOOK_POINTS, Hooks
+from repro.core.engine import Environment
+from repro.core.simulator import SimSpec, Simulation, WorkerSpec, simulate
+from repro.core.tenancy import TenantSpec, TenantTier
+from repro.core.workload import WorkloadSpec
+from repro.obs import (COMPONENTS, BoundedSeries, ObsSpec, TS_FIELDS,
+                       validate_chrome_trace)
+
+EPS = 1e-6
+
+
+def _small(n=40, obs=None, **kw):
+    kw.setdefault("local_policy", "continuous")
+    return SimSpec(
+        arch="llama2-7b", workers=[WorkerSpec(), WorkerSpec()],
+        workload=WorkloadSpec(num_requests=n, qps=20.0, seed=3),
+        max_batch=32, obs=obs, **kw)
+
+
+def _pressure(n=48, obs=None, **kw):
+    """Undersized KV pool (benchmarks/kv_hierarchy.py recipe): decode
+    growth forces swap preemptions."""
+    from repro.configs import get_config
+    from repro.core.costmodel.operators import (kv_bytes_per_token,
+                                                param_bytes)
+    cfg = get_config("llama2-7b")
+    kvt = kv_bytes_per_token(cfg, 2)
+    cap = (param_bytes(cfg, 2) + (10 * 1024 + 4 * 192) * kvt) / 0.9
+    return SimSpec(
+        arch="llama2-7b",
+        workers=[WorkerSpec(hw="A100", mem_cap_override=cap)],
+        workload=WorkloadSpec(num_requests=n, qps=0.0, seed=0,
+                              lengths="fixed", prompt_len=1024,
+                              output_len=192),
+        local_policy="continuous", preemption_mode="swap",
+        obs=obs, **kw)
+
+
+# ---------------------------------------------------------------------------
+# breakpoint registry: O(1) empty fast path + no defaultdict pollution
+# ---------------------------------------------------------------------------
+def test_fire_on_unregistered_point_does_not_mutate():
+    h = Hooks()
+    for p in HOOK_POINTS:
+        h.fire(p, object())
+    assert h._hooks == {}          # no defaultdict-miss allocation
+
+
+def test_hooks_register_and_fire():
+    h = Hooks()
+    seen = []
+    h.on("on_admit", lambda *a: seen.append(a))
+    h.on("on_admit", lambda *a: seen.append(a))
+    h.fire("on_admit", "w", "r")
+    assert seen == [("w", "r"), ("w", "r")]
+    assert set(h._hooks) == {"on_admit"}    # only the registered point
+
+
+def test_hooks_reject_unknown_point():
+    h = Hooks()
+    with pytest.raises(KeyError):
+        h.on("no_such_point", lambda: None)
+
+
+def test_all_seven_hook_points_fire_in_small_sim():
+    """Every point in HOOK_POINTS fires at least once in a sim that
+    prefills, decodes, batches and finishes — the registry audit."""
+    assert len(HOOK_POINTS) == 7
+    counts = {p: 0 for p in HOOK_POINTS}
+    sim = Simulation(_small())
+
+    def bump(point):
+        return lambda *a, **kw: counts.__setitem__(
+            point, counts[point] + 1)
+
+    for w in sim.workers:
+        for p in HOOK_POINTS:
+            w.hooks.on(p, bump(p))
+    sim.run()
+    missing = [p for p, c in counts.items() if c == 0]
+    assert not missing, f"hook points never fired: {missing}"
+
+
+# ---------------------------------------------------------------------------
+# engine daemon events (the time-series sampler's substrate)
+# ---------------------------------------------------------------------------
+def test_daemon_only_heap_ends_run():
+    env = Environment()
+
+    def ticker():
+        while True:
+            yield env.timeout(1.0, daemon=True)
+
+    env.process(ticker(), name="tick", daemon=True)
+    env.run()
+    assert env.now == 0.0          # nothing non-daemon ever scheduled
+
+
+def test_daemon_does_not_extend_sim_past_real_work():
+    env = Environment()
+    ticks = []
+
+    def ticker():
+        while True:
+            yield env.timeout(1.0, daemon=True)
+            ticks.append(env.now)
+
+    def work():
+        yield env.timeout(3.5)
+
+    env.process(ticker(), name="tick", daemon=True)
+    env.process(work(), name="work")
+    env.run()
+    assert env.now == 3.5          # run ends with the last real event
+    assert ticks == [1.0, 2.0, 3.0]
+
+
+# ---------------------------------------------------------------------------
+# BoundedSeries: stride-doubling decimation
+# ---------------------------------------------------------------------------
+def test_bounded_series_caps_and_decimates():
+    s = BoundedSeries(cap=8)
+    for i in range(1000):
+        if s.should_record():
+            s.append(i)
+    assert len(s) <= 8
+    rows = list(s)
+    assert rows[0] == 0            # the t~0 anchor survives decimation
+    assert rows == sorted(rows)
+    assert s.stride > 1            # decimation actually kicked in
+
+
+def test_bounded_series_no_decimation_below_cap():
+    s = BoundedSeries(cap=100)
+    for i in range(50):
+        if s.should_record():
+            s.append(i)
+    assert list(s) == list(range(50))
+    assert s.stride == 1
+
+
+# ---------------------------------------------------------------------------
+# trace recorder + validator
+# ---------------------------------------------------------------------------
+def test_trace_exports_valid_chrome_json(tmp_path):
+    res = simulate(_small(obs=ObsSpec(trace=True)))
+    path = str(tmp_path / "trace.json")
+    res.export_trace(path)
+    with open(path) as f:
+        data = json.load(f)
+    assert validate_chrome_trace(data) == []
+    names = {e["name"] for e in data["traceEvents"]}
+    assert "iteration" in names
+    cats = {e.get("cat") for e in data["traceEvents"]}
+    assert "request.total" in cats and "request" in cats
+    assert data["otherData"]["dropped_events"] == 0
+
+
+def test_trace_span_durations_sum_to_latency():
+    """Acceptance criterion: per-request phase spans are contiguous and
+    sum to the measured arrival->finish latency within 1e-6 s."""
+    res = simulate(_small(obs=ObsSpec(trace=True)))
+    by_req = {}
+    for ev in res.trace.events:
+        if ev.get("cat") == "request":
+            by_req.setdefault(ev["tid"], []).append(ev)
+    lat = {r.id: (r.t_finish - r.arrival_time) for r in res.finished}
+    assert by_req and set(lat) == set(by_req)
+    for rid, evs in by_req.items():
+        total = sum(e["dur"] for e in evs) / 1e6
+        assert abs(total - lat[rid]) < EPS, (rid, total, lat[rid])
+
+
+def test_validator_flags_corrupt_traces():
+    res = simulate(_small(n=10, obs=ObsSpec(trace=True)))
+    good = res.trace.to_json()
+    assert validate_chrome_trace(good) == []
+
+    bad = json.loads(json.dumps(good))
+    for ev in bad["traceEvents"]:
+        if ev.get("cat") == "request":
+            ev["dur"] = ev["dur"] + 5e5      # open a gap
+            break
+    assert validate_chrome_trace(bad)
+
+    bad2 = json.loads(json.dumps(good))
+    for ev in bad2["traceEvents"]:
+        if ev["ph"] == "X":
+            ev["dur"] = -1.0
+            break
+    assert validate_chrome_trace(bad2)
+
+    assert validate_chrome_trace({}) != []
+    assert validate_chrome_trace({"traceEvents": [{}]}) != []
+
+
+def test_trace_event_cap_drops_not_grows():
+    res = simulate(_small(obs=ObsSpec(trace=True, max_trace_events=50)))
+    assert len(res.trace) <= 50
+    assert res.trace.dropped > 0
+    assert res.trace.to_json()["otherData"]["dropped_events"] > 0
+
+
+def test_trace_records_swaps_and_preempts():
+    res = simulate(_pressure(obs=ObsSpec(trace=True)))
+    assert res.memory_summary()["swap_preempts"] > 0
+    names = {e["name"] for e in res.trace.events}
+    assert "swap_out" in names and "swap_in" in names
+    assert "preempted" in names
+    assert validate_chrome_trace(res.trace.to_json()) == []
+
+
+def test_trace_rejected_and_inflight_outcomes():
+    tenants = [TenantSpec(
+        "t0", TenantTier(name="free", rate_tokens_per_s=500.0,
+                         burst_tokens=600.0, admission_policy="reject"),
+        WorkloadSpec(num_requests=60, qps=50.0, seed=2))]
+    res = simulate(SimSpec(
+        arch="llama2-7b", workers=[WorkerSpec()], tenants=tenants,
+        obs=ObsSpec(trace=True)))
+    outcomes = {e["args"]["outcome"] for e in res.trace.events
+                if e.get("cat") == "request.total"}
+    assert "rejected" in outcomes and "finished" in outcomes
+    assert validate_chrome_trace(res.trace.to_json()) == []
+
+
+def test_trace_migrate_phase_in_disagg():
+    ws = [WorkerSpec(role="prefill"), WorkerSpec(role="decode")]
+    res = simulate(SimSpec(
+        arch="llama2-7b", workers=ws, global_policy="disagg",
+        workload=WorkloadSpec(num_requests=30, qps=10.0, seed=1),
+        obs=ObsSpec(trace=True)))
+    names = {e["name"] for e in res.trace.events
+             if e.get("cat") == "request"}
+    assert "migrate" in names
+    assert validate_chrome_trace(res.trace.to_json()) == []
+
+
+# ---------------------------------------------------------------------------
+# latency attribution: conservation + components
+# ---------------------------------------------------------------------------
+def _check_conserved(res):
+    worst = 0.0
+    for r in res.finished:
+        f = r.obs.final
+        ttft = r.t_first_token - r.arrival_time
+        worst = max(worst, abs(sum(f["ttft"].values()) - ttft))
+        dec = r.t_finish - r.t_first_token
+        worst = max(worst, abs(sum(f["decode"].values()) - dec))
+    return worst
+
+
+def test_attribution_conserves_exactly():
+    res = simulate(_small(obs=ObsSpec(attribution=True)))
+    assert _check_conserved(res) < EPS
+    bd = res.time_breakdown()
+    assert bd["mode"] == "exact" and bd["n"] == len(res.finished)
+    # mean components sum to the mean measured latency
+    mean_ttft = sum(r.ttft for r in res.finished) / len(res.finished)
+    assert abs(sum(bd["ttft_mean"].values()) - mean_ttft) < EPS
+    assert set(bd["ttft_mean"]) <= set(COMPONENTS)
+    assert set(bd["decode_mean"]) <= set(COMPONENTS)
+
+
+def test_attribution_conserves_under_swap_preemption():
+    res = simulate(_pressure(obs=ObsSpec(attribution=True)))
+    assert res.memory_summary()["swap_preempts"] > 0
+    assert _check_conserved(res) < EPS
+    bd = res.time_breakdown()
+    assert "swap" in {**bd["ttft_mean"], **bd["decode_mean"]}
+
+
+def test_attribution_gateway_component_with_admission():
+    tenants = [TenantSpec(
+        "t0", TenantTier(name="free", rate_tokens_per_s=2000.0,
+                         burst_tokens=2000.0),
+        WorkloadSpec(num_requests=50, qps=40.0, seed=2))]
+    res = simulate(SimSpec(
+        arch="llama2-7b", workers=[WorkerSpec()], tenants=tenants,
+        obs=ObsSpec(attribution=True)))
+    assert _check_conserved(res) < EPS
+    assert res.time_breakdown()["ttft_mean"].get("gateway", 0.0) > 0.0
+
+
+def test_attribution_comm_bubble_with_pipeline():
+    from repro.core.simulator import ParallelSpec
+    res = simulate(SimSpec(
+        arch="llama2-7b", backend="roofline",
+        workers=[WorkerSpec(hw="A100")],
+        parallel=ParallelSpec(pp=2, microbatches=4),
+        workload=WorkloadSpec(num_requests=16, qps=4.0, seed=1,
+                              lengths="fixed", prompt_len=512,
+                              output_len=32),
+        obs=ObsSpec(attribution=True)))
+    assert _check_conserved(res) < EPS
+    bd = res.time_breakdown()
+    assert "comm" in bd["decode_mean"] and "bubble" in bd["decode_mean"]
+
+
+def test_explain_renders_all_sections():
+    res = simulate(_small(obs=ObsSpec(attribution=True)))
+    text = res.explain()
+    for frag in ("TTFT", "decode phase", "TPOT", "total", "queue"):
+        assert frag in text, frag
+
+
+def test_time_breakdown_requires_attribution():
+    res = simulate(_small())
+    with pytest.raises(ValueError, match="attribution"):
+        res.time_breakdown()
+    with pytest.raises(ValueError, match="tracing"):
+        res.export_trace("/dev/null")
+
+
+# ---------------------------------------------------------------------------
+# streaming drop-mode attribution
+# ---------------------------------------------------------------------------
+def test_streaming_attribution_matches_exact_means():
+    exact = simulate(_small(n=120, obs=ObsSpec(attribution=True)))
+    drop = simulate(_small(n=120, obs=ObsSpec(attribution=True),
+                           streaming=True, retain_requests=False))
+    assert not drop.requests                    # really dropped
+    eb, db = exact.time_breakdown(), drop.time_breakdown()
+    assert db["mode"] == "streaming" and db["n"] == eb["n"]
+    for section in ("ttft_mean", "decode_mean", "tpot_mean"):
+        assert set(db[section]) == set(eb[section]), section
+        for k, v in eb[section].items():
+            assert abs(db[section][k] - v) < 1e-9, (section, k)
+    assert db["ttft_p99"] is None               # no tails in drop mode
+    assert "exact mode" in drop.explain()       # the p99 footnote
+
+
+# ---------------------------------------------------------------------------
+# time series recorder
+# ---------------------------------------------------------------------------
+def test_timeseries_rows_bounded_and_typed(tmp_path):
+    res = simulate(_small(
+        n=150, obs=ObsSpec(timeseries=True, sample_interval=0.01,
+                           timeseries_cap=32)))
+    ts = res.timeseries
+    cluster = ts.rows("cluster")
+    assert 0 < len(cluster) <= 32
+    times = [row["t"] for row in cluster]
+    assert times == sorted(times)
+    for row in cluster:
+        assert set(row) <= set(TS_FIELDS)
+    # per-worker rows exist and sum into the cluster row
+    w0 = ts.rows("worker0")
+    assert w0 and all(r["scope"] == "worker0" for r in w0)
+    last = cluster[-1]
+    assert last["n_finished"] == len(res.finished)
+
+    csv_path = str(tmp_path / "ts.csv")
+    json_path = str(tmp_path / "ts.json")
+    res.export_timeseries(csv_path)
+    res.export_timeseries(json_path)
+    with open(csv_path) as f:
+        header = f.readline().strip().split(",")
+    assert header == list(TS_FIELDS)
+    with open(json_path) as f:
+        data = json.load(f)
+    assert data["fields"] == list(TS_FIELDS)
+    scopes = {r["scope"] for r in data["samples"]}
+    assert scopes >= {"cluster", "worker0"}
+
+
+def test_timeseries_final_sample_covers_short_sims():
+    res = simulate(_small(n=5, obs=ObsSpec(timeseries=True,
+                                           sample_interval=1e9)))
+    rows = res.timeseries.rows("cluster")
+    assert rows and rows[-1]["n_finished"] == len(res.finished)
+
+
+# ---------------------------------------------------------------------------
+# zero-cost when disabled
+# ---------------------------------------------------------------------------
+def test_disabled_obs_is_inert_and_identical():
+    plain = simulate(_small())
+    off = simulate(_small(obs=ObsSpec()))
+    full = simulate(_small(obs=ObsSpec.full()))
+    assert off.trace is None and off.timeseries is None
+    assert plain.summary() == off.summary()
+    # enabling obs never changes simulated behavior, only records it
+    s_full = full.summary()
+    s_plain = plain.summary()
+    for k, v in s_plain.items():
+        assert s_full[k] == v, k
+
+
+def test_obsspec_enabled_semantics():
+    assert not ObsSpec().enabled
+    assert ObsSpec(trace=True).enabled
+    assert ObsSpec(timeseries=True).enabled
+    assert ObsSpec(attribution=True).enabled
+    full = ObsSpec.full(sample_interval=0.25)
+    assert full.trace and full.timeseries and full.attribution
+    assert full.sample_interval == 0.25

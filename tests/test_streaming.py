@@ -306,3 +306,32 @@ def test_mem_timeline_stays_bounded():
         max_batch=4))
     for tl in res.worker_mem.values():
         assert len(tl) <= MEM_TIMELINE_CAP
+
+
+# ---------------------------------------------------------------------------
+# observability in drop mode (repro.obs, docs/OBSERVABILITY.md)
+# ---------------------------------------------------------------------------
+def test_drop_mode_summary_unchanged_by_obs():
+    """Full observability only records — every summary metric of the
+    golden drop-mode run stays bit-identical with it enabled."""
+    from repro.obs import ObsSpec
+    plain = simulate(_base(True, False)).summary()
+    obs = simulate(_base(True, False, obs=ObsSpec.full())).summary()
+    assert obs == plain
+
+
+def test_drop_mode_attribution_conserves_means():
+    """retain_requests=False keeps per-component sums in StreamingStats;
+    the folded means must equal the exact-mode means (same sim, retained
+    requests) and sum to the measured mean latency within 1e-6."""
+    from repro.obs import ObsSpec
+    exact = simulate(_base(False, True, obs=ObsSpec(attribution=True)))
+    drop = simulate(_base(True, False, obs=ObsSpec(attribution=True)))
+    assert not drop.requests
+    eb, db = exact.time_breakdown(), drop.time_breakdown()
+    assert db["n"] == eb["n"] == drop.stats.n_finished
+    for section in ("ttft_mean", "decode_mean", "tpot_mean"):
+        for k, v in eb[section].items():
+            assert abs(db[section][k] - v) < 1e-9, (section, k)
+    mean_ttft = sum(r.ttft for r in exact.finished) / len(exact.finished)
+    assert abs(sum(db["ttft_mean"].values()) - mean_ttft) < 1e-6
