@@ -28,7 +28,7 @@ NON_BENCHMARKS = {"common", "run", "finalize_docs", "roofline_report",
 #: benchmarks scripts/ci.sh runs as `--smoke` CI gates; each must expose
 #: main(argv) handling "--smoke"
 SMOKE_GATED = {"sim_speed", "kv_hierarchy", "parallelism",
-               "observability"}
+               "observability", "chaos_sweep"}
 
 
 def discover_modules() -> set:
@@ -80,11 +80,12 @@ def main(argv=None):
     args = ap.parse_args(argv)
     q = args.quick
 
-    from benchmarks import (batching, disagg_ratio, disagg_validation,
-                            hardware_sub, kv_hierarchy, mem_footprint,
-                            memcache, memratio, observability,
-                            parallelism, platform_sweep, sim_speed,
-                            spec_decode, tenant_qos, validation)
+    from benchmarks import (batching, chaos_sweep, disagg_ratio,
+                            disagg_validation, hardware_sub,
+                            kv_hierarchy, mem_footprint, memcache,
+                            memratio, observability, parallelism,
+                            platform_sweep, sim_speed, spec_decode,
+                            tenant_qos, validation)
 
     benches = [
         ("validation", lambda: validation.run(n_req=20 if q else 40)),
@@ -106,6 +107,7 @@ def main(argv=None):
         ("kv_hierarchy", lambda: kv_hierarchy.run(quick=q)),
         ("parallelism", lambda: parallelism.run(quick=q)),
         ("observability", lambda: observability.run(quick=q)),
+        ("chaos_sweep", lambda: chaos_sweep.run(quick=q)),
     ]
     errors = check_registry({name for name, _ in benches})
     for e in errors:

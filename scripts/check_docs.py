@@ -22,7 +22,11 @@ Checks:
   6. every ``HOOK_POINTS`` breakpoint, attribution ``COMPONENTS``
      name, trace ``SPAN_PHASES`` name and time-series ``TS_FIELDS``
      column appears as a code-span in docs/OBSERVABILITY.md — new
-     observability surface without docs fails CI.
+     observability surface without docs fails CI,
+  7. every fault kind (``FAULT_KINDS``) and every
+     ``Results.availability_summary()`` field
+     (``AVAILABILITY_FIELDS``) appears as a code-span in
+     docs/RELIABILITY.md — new chaos surface without docs fails CI.
 
 Run:  python scripts/check_docs.py        (exits non-zero on failure)
 """
@@ -201,6 +205,29 @@ def check_observability_docs() -> list:
     return errors
 
 
+def check_reliability_docs() -> list:
+    """Every fault kind and every availability-summary field must be
+    documented as a `code span` in docs/RELIABILITY.md."""
+    from repro.core.faults import FAULT_KINDS
+    from repro.core.metrics import AVAILABILITY_FIELDS
+
+    errors = []
+    path = os.path.join(ROOT, "docs", "RELIABILITY.md")
+    if not os.path.exists(path):
+        return ["docs/RELIABILITY.md: missing (reliability doc coverage "
+                "needs it)"]
+    with open(path) as f:
+        text = f.read()
+    groups = [("fault kind", FAULT_KINDS),
+              ("availability field", AVAILABILITY_FIELDS)]
+    for what, names in groups:
+        for n in names:
+            if f"`{n}`" not in text and f'`"{n}"`' not in text:
+                errors.append(f"{what} `{n}` not documented in "
+                              f"docs/RELIABILITY.md")
+    return errors
+
+
 def main() -> int:
     errors = []
     docs = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
@@ -214,6 +241,7 @@ def main() -> int:
     errors.extend(check_memory_docs())
     errors.extend(check_parallelism_docs())
     errors.extend(check_observability_docs())
+    errors.extend(check_reliability_docs())
     for e in errors:
         print(f"docs-check FAIL: {e}")
     if not errors:
@@ -221,7 +249,7 @@ def main() -> int:
         print(f"docs-check OK: {n} markdown files, links + anchors resolve, "
               f"all benchmarks/examples have module docstrings, all "
               f"policies/workload kinds and memory/parallelism/"
-              f"observability registries documented")
+              f"observability/reliability registries documented")
     return 1 if errors else 0
 
 

@@ -88,6 +88,15 @@ stage "smoke: parallelism crossover + bubble gates" \
     env PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     timeout 300 python benchmarks/parallelism.py --smoke
 
+# chaos/availability gates (docs/RELIABILITY.md): zero-fault chaos is
+# byte-identical to the baseline, no request is lost or duplicated
+# under stochastic failures, availability improves monotonically with
+# replicas, host-surviving KV beats re-prefill on TTFT, and the same
+# seed reproduces identical availability numbers
+stage "smoke: chaos availability + no-loss gates" \
+    env PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    timeout 300 python benchmarks/chaos_sweep.py --smoke
+
 # observability gates (docs/OBSERVABILITY.md): exported Chrome trace
 # validates (spans nest, durations sum to latency within 1e-6),
 # attribution conserves in exact and streaming drop-mode, time series

@@ -14,7 +14,10 @@ from repro.core.workload import (WorkloadSpec, generate,  # noqa: F401
                                  make_source, make_tenant_source)
 from repro.core.metrics import (Results, StreamingStats,  # noqa: F401
                                 jain_index)
-from repro.core.simulator import (SimSpec, WorkerSpec, FaultSpec,  # noqa: F401
+from repro.core.faults import (ChaosSpec, FaultEvent,  # noqa: F401
+                               FaultProcess, FaultSpec, FAULT_KINDS,
+                               load_fault_trace)
+from repro.core.simulator import (SimSpec, WorkerSpec,  # noqa: F401
                                   Simulation, simulate)
 from repro.core.specdecode import (AcceptanceModel,  # noqa: F401
                                    SpecDecodeSpec)

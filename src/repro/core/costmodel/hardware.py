@@ -38,6 +38,12 @@ class HardwareSpec:
     bw_eff: float = 0.82
     # fixed per-iteration overhead (framework + launch), seconds
     iter_overhead: float = 4.0e-3
+    #: model-reload latency after a worker restart, seconds
+    #: (docs/RELIABILITY.md): weights back onto the device plus server
+    #: re-init — the dominant recovery cost, and the same scale-up lag
+    #: an autoscaler would pay.  Consumed only when ``SimSpec.chaos``
+    #: is set; the legacy fault path keeps recovery free.
+    reload_time: float = 30.0
 
     def with_(self, **kw) -> "HardwareSpec":
         return replace(self, **kw)

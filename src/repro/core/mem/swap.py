@@ -66,6 +66,7 @@ class SwapManager:
         self.bytes_out = 0.0
         self.bytes_in = 0.0
         self.fallbacks = 0               # host full: recompute instead
+        self.adopted = 0                 # failover entries taken over
         #: observability tap (repro.obs): when set, called as
         #: on_event(kind, req_id, tokens, nbytes) for every swap_out /
         #: swap_in so the trace can mark transfers on the worker lane
@@ -122,6 +123,26 @@ class SwapManager:
             self.on_event("swap_in", req.id, tokens, nbytes)
         return self.transfer_time(tokens)
 
+    def adopt(self, req: Request, tokens: int) -> bool:
+        """Take ownership of a KV entry that already lives in host DRAM
+        (failover re-dispatch, docs/RELIABILITY.md): no PCIe transfer —
+        the bytes never moved — just capacity accounting in the
+        adopting worker's tier.  Returns False (and counts a fallback)
+        when this tier has no room; the caller then re-prefills."""
+        if tokens <= 0 or req.id in self.host:
+            return False
+        nbytes = self.bytes_for(tokens)
+        if self.used_bytes + nbytes > self.sc.host_capacity_bytes:
+            self.fallbacks += 1
+            return False
+        self.host[req.id] = tokens
+        self.used_bytes += nbytes
+        self.peak_used_bytes = max(self.peak_used_bytes, self.used_bytes)
+        self.adopted += 1
+        if self.on_event is not None:
+            self.on_event("adopt", req.id, tokens, nbytes)
+        return True
+
     def drop(self, req: Request) -> int:
         """Discard req's host copy without a transfer (finish, failure,
         migration); idempotent.  Returns tokens released."""
@@ -137,4 +158,5 @@ class SwapManager:
                 "bytes_in": self.bytes_in,
                 "used_bytes": self.used_bytes,
                 "peak_used_bytes": self.peak_used_bytes,
-                "fallbacks": self.fallbacks}
+                "fallbacks": self.fallbacks,
+                "adopted": self.adopted}

@@ -22,6 +22,18 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.request import Request
 
+#: every key of ``Results.availability_summary()``;
+#: scripts/check_docs.py asserts each is documented in
+#: docs/RELIABILITY.md
+AVAILABILITY_FIELDS = (
+    "service_availability", "capacity_availability",
+    "availability_per_worker", "downtime_per_worker",
+    "service_downtime_s", "capacity_downtime_s", "degraded_s",
+    "n_failures", "mtbf_observed_s", "mttr_observed_s", "target",
+    "window_s", "error_budget_s", "budget_consumed_s",
+    "budget_remaining_frac", "burn_rate", "request_success_rate",
+    "tenants")
+
 
 def _interp_percentile(s: Sequence[float], p: float) -> float:
     """Linear-interpolated percentile of an already-sorted sequence."""
@@ -324,6 +336,12 @@ class Results:
     trace: Optional[object] = field(default=None, repr=False)
     #: repro.obs.TimeSeriesRecorder when ObsSpec(timeseries=True)
     timeseries: Optional[object] = field(default=None, repr=False)
+    #: injected-fault log (repro.core.faults.FaultEvent) when the sim
+    #: ran with faults or a chaos spec; availability_summary() derives
+    #: all availability accounting from it
+    fault_events: Optional[list] = None
+    #: worker count (after replica expansion) for capacity availability
+    n_workers: int = 0
     #: per-Results caches: finished list and sorted metric lists are
     #: computed once (the repeated-full-sort fix); safe because Results
     #: is read after the simulation has finished mutating requests
@@ -663,6 +681,134 @@ class Results:
                 "preempt_rate": s.preempts / max(1, s.n_folded),
             }
         return out
+
+    # ------------------------------------------------------------------
+    def availability_summary(self, *, target: float = 0.995,
+                             window: Optional[float] = None) -> dict:
+        """Availability and error-budget accounting derived from the
+        injected-fault log (docs/RELIABILITY.md).
+
+        Definitions (``AVAILABILITY_FIELDS`` lists every returned key):
+
+        * **service availability** — fraction of the observation span
+          with at least one worker alive (the cluster could serve);
+          ``service_downtime_s`` is the complementary all-down time,
+        * **capacity availability** — mean per-worker uptime fraction,
+          i.e. ``1 - sum(worker downtime) / (n_workers * span)``; it
+          penalizes every lost replica, not just total outages,
+        * **error budget** — ``(1 - target) * window_s`` seconds of
+          allowed service downtime; the observed all-down time is
+          rate-extrapolated from the simulated span to the window
+          (pass e.g. ``window=30 * 86400`` for a 30-day budget), and
+          ``burn_rate`` is observed unavailability over allowed
+          unavailability (1.0 = exactly on budget).
+
+        Downtime intervals open at a ``fail`` event and close at the
+        matching ``recover`` (which lands *after* the repair draw and
+        the model reload, so recovery cost counts as downtime); an
+        interval still open at the end of the run is clipped to
+        ``sim_time``.  Degraded (slowdown != 1) spans are tracked
+        separately — a straggler serves, slowly."""
+        T = max(self.sim_time, 1e-12)
+        n = self.n_workers or len(self.worker_mem) or 1
+        events = sorted(self.fault_events or [],
+                        key=lambda e: (e.time, e.worker))
+        down: Dict[int, List[Tuple[float, float]]] = {}
+        open_down: Dict[int, float] = {}
+        deg_open: Dict[int, float] = {}
+        degraded = 0.0
+        n_failures = 0
+        for ev in events:
+            if ev.kind == "fail":
+                if ev.worker not in open_down:
+                    open_down[ev.worker] = ev.time
+                    n_failures += 1
+            elif ev.kind == "recover":
+                t0 = open_down.pop(ev.worker, None)
+                if t0 is not None:
+                    down.setdefault(ev.worker, []).append(
+                        (t0, min(ev.time, T)))
+            elif ev.kind == "slowdown":
+                if ev.factor != 1.0:
+                    deg_open.setdefault(ev.worker, ev.time)
+                else:
+                    t0 = deg_open.pop(ev.worker, None)
+                    if t0 is not None:
+                        degraded += max(0.0, min(ev.time, T) - t0)
+            # "drain" is not downtime: the worker serves its queue
+        for wid, t0 in open_down.items():
+            down.setdefault(wid, []).append((t0, T))
+        for t0 in deg_open.values():
+            degraded += max(0.0, T - t0)
+        downtime_per_worker = {
+            wid: sum(b - a for a, b in down.get(wid, ()))
+            for wid in range(n)}
+        capacity_down = sum(downtime_per_worker.values())
+        # service downtime: sweep the interval deltas, accumulate the
+        # spans where every one of the n workers is down at once
+        deltas: List[Tuple[float, int]] = []
+        for ivs in down.values():
+            for a, b in ivs:
+                deltas.append((a, 1))
+                deltas.append((b, -1))
+        deltas.sort()
+        service_down = 0.0
+        cnt = 0
+        t_all: Optional[float] = None
+        for t, d in deltas:
+            was_all = cnt == n
+            cnt += d
+            if not was_all and cnt == n:
+                t_all = t
+            elif was_all and cnt < n and t_all is not None:
+                service_down += t - t_all
+                t_all = None
+        window_s = window if window is not None else T
+        scale = window_s / T
+        error_budget_s = (1.0 - target) * window_s
+        budget_consumed_s = service_down * scale
+        if self.stats is not None:
+            n_total = self.stats.n_folded + len(self.requests)
+            n_fin = self.stats.n_finished
+        else:
+            n_total = len(self.requests)
+            n_fin = len(self.finished)
+        tenants: Dict[str, dict] = {}
+        if self.tenant_specs:
+            for tid, row in self.tenant_summary().items():
+                nreq = row.get("n_requests", 0) or 0
+                tenants[tid] = {
+                    "success_rate": row.get("n_finished", 0) / nreq
+                    if nreq else 1.0,
+                    "slo_attainment": row.get("slo_attainment",
+                                              float("nan"))}
+        return {
+            "service_availability": 1.0 - service_down / T,
+            "capacity_availability": 1.0 - capacity_down / (n * T),
+            "availability_per_worker": {
+                wid: 1.0 - dt / T
+                for wid, dt in downtime_per_worker.items()},
+            "downtime_per_worker": downtime_per_worker,
+            "service_downtime_s": service_down,
+            "capacity_downtime_s": capacity_down,
+            "degraded_s": degraded,
+            "n_failures": n_failures,
+            "mtbf_observed_s": (n * T - capacity_down) / n_failures
+            if n_failures else None,
+            "mttr_observed_s": capacity_down / n_failures
+            if n_failures else None,
+            "target": target,
+            "window_s": window_s,
+            "error_budget_s": error_budget_s,
+            "budget_consumed_s": budget_consumed_s,
+            "budget_remaining_frac":
+                1.0 - budget_consumed_s / error_budget_s
+                if error_budget_s > 0 else float("nan"),
+            "burn_rate": (service_down / T) / (1.0 - target)
+            if target < 1.0 else float("nan"),
+            "request_success_rate": n_fin / n_total if n_total else 1.0,
+            "tenants": tenants,
+        }
 
     def summary(self, *, ttft_slo: float = 0.0,
                 mtpot_slo: float = 0.0) -> Dict[str, float]:

@@ -57,13 +57,17 @@ class GlobalScheduler:
 def _eligible(workers, *, prefill=None, decode=None):
     out = []
     for w in workers:
-        if not w.alive:
+        if not w.alive or getattr(w, "draining", False):
+            # draining (repro.core.faults): finishes its queue but
+            # takes no new dispatches — like dead for placement
             continue
         if prefill is not None and w.run_prefill != prefill:
             continue
         if decode is not None and w.run_decode != decode:
             continue
         out.append(w)
+    # role/drain fallback: with nothing eligible, any live worker beats
+    # dropping the request (a fully-draining cluster still serves)
     return out or [w for w in workers if w.alive]
 
 

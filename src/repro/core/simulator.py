@@ -60,6 +60,8 @@ from repro.core.costmodel.hardware import (CLUSTERS, ClusterSpec, DGX_A100,
 from repro.core.costmodel.operators import kv_bytes_per_token, \
     state_bytes_per_seq
 from repro.core.engine import Environment
+from repro.core.faults import (ChaosSpec, FaultEvent, FaultInjector,
+                               FaultProcess, FaultSpec, load_fault_trace)
 from repro.core.mem.block_manager import MemoryConfig
 from repro.core.mem.memory_pool import MemoryPool, PoolConfig
 from repro.core.mem.swap import PREEMPTION_MODES, SwapConfig, SwapManager
@@ -97,12 +99,11 @@ def effective_tp(ws: WorkerSpec, parallel: ParallelSpec) -> int:
     return ws.tp if ws.tp != 1 else parallel.tp
 
 
-@dataclass(frozen=True)
-class FaultSpec:
-    time: float
-    worker: int
-    kind: str                           # "slowdown" | "fail" | "recover"
-    factor: float = 1.0
+# FaultSpec grew into a family of fault processes and moved to
+# repro.core.faults (docs/RELIABILITY.md); re-exported here so the
+# original import path keeps working
+__all_faults__ = (ChaosSpec, FaultEvent, FaultInjector, FaultProcess,
+                  FaultSpec, load_fault_trace)
 
 
 @dataclass
@@ -144,6 +145,11 @@ class SimSpec:
     pool: Optional[PoolConfig] = None
     kv_link: comm_mod.LinkSpec = comm_mod.NVLINK
     faults: Sequence[FaultSpec] = ()
+    #: chaos layer (docs/RELIABILITY.md): stochastic MTBF/MTTR fault
+    #: processes plus the costly-recovery model (model reload, warm-up
+    #: iterations, host-KV survival).  None keeps the legacy contract:
+    #: scheduled ``faults`` with free, instant recovery
+    chaos: Optional[ChaosSpec] = None
     backend: str = "roofline"
     backend_samples: Optional[list] = None   # for tabular
     backends_by_worker: Optional[Dict[int, CostBackend]] = None
@@ -221,6 +227,14 @@ class Simulation:
             if spec.tenants else None
         self.workers: List[Worker] = []
         self._build_workers()
+        #: requests held at the dispatcher during a cluster-wide outage
+        #: (every worker dead), re-placed on the first recovery; each
+        #: entry is (request, source SwapManager or None)
+        self._parked: List[tuple] = []
+        self.fault_injector: Optional[FaultInjector] = \
+            FaultInjector(self, spec.chaos, spec.faults) \
+            if spec.faults or (spec.chaos is not None
+                               and spec.chaos.processes) else None
         self._n_finished = 0
         self._kv_bytes_per_token = kv_bytes_per_token(
             self.cfg, spec.dtype_bytes) or state_bytes_per_seq(
@@ -352,10 +366,25 @@ class Simulation:
         t_start = self.env.now
 
         def on_done(_ev, req=req, fw=from_worker, tw=target):
+            if req.state is not State.MIGRATING:
+                # the source worker died mid-transfer: fail() already
+                # reset the request and re-dispatched it, so the partial
+                # KV never arrived — delivering it now would duplicate
+                # the request on two workers
+                return
             fw.release(req)
             if obs is not None:
                 obs.on_migrate_done(req, self.env.now,
                                     self.env.now - t_start)
+            if not tw.alive:
+                # target died while the KV was on the wire: the copy is
+                # lost with the device, so re-prefill from scratch
+                req.swapped_tokens = 0
+                req.prefill_done_len = 0
+                req.cached_len = 0
+                req.state = State.QUEUED
+                self.redispatch([req])
+                return
             tw.receive_migrated(req)
 
         done.wait(on_done)
@@ -384,15 +413,48 @@ class Simulation:
         if self.stats is not None:
             self.stats.fold(req)
 
-    def redispatch(self, orphans: List[Request]) -> None:
+    def redispatch(self, orphans: List[Request],
+                   from_worker: Optional[Worker] = None) -> None:
         obs = self.obs
+        src_swap = from_worker.swap if from_worker is not None else None
         for req in sorted(orphans, key=lambda r: r.id):
             if obs is not None:
                 obs.on_requeue(req, self.env.now)
-            wid = self.global_sched.assign(req, self.workers)
-            if obs is not None:
-                self.global_sched.observe_assign(req, wid)
-            self.workers[wid].submit(req)
+            self._place(req, src_swap)
+
+    def _place(self, req: Request, src_swap=None) -> None:
+        """Assign one request to a worker.  During a cluster-wide outage
+        (no worker alive) the request parks at the dispatcher and is
+        re-placed by the first recovery.  ``src_swap`` is a failed
+        worker's host-DRAM tier: a surviving KV entry there follows the
+        request into the new worker's tier (no PCIe transfer — the
+        bytes never left host memory), falling back to re-prefill when
+        the new tier has no room."""
+        if not any(w.alive for w in self.workers):
+            self._parked.append((req, src_swap))
+            return
+        wid = self.global_sched.assign(req, self.workers)
+        if self.obs is not None:
+            self.global_sched.observe_assign(req, wid)
+        target = self.workers[wid]
+        if src_swap is not None and src_swap.holds(req):
+            tokens = src_swap.drop(req)
+            tswap = target.swap
+            if tswap is None or not tswap.adopt(req, tokens):
+                # host copy has nowhere to live on the new worker:
+                # fall back to re-prefilling from scratch
+                req.swapped_tokens = 0
+                req.prefill_done_len = 0
+                req.cached_len = 0
+        target.submit(req)
+
+    def on_worker_recovered(self, worker: Worker) -> None:
+        """Fault injector finished reviving ``worker``: re-place any
+        requests parked during a cluster-wide outage."""
+        if self._parked:
+            parked, self._parked = self._parked, []
+            for req, src_swap in parked:
+                self._place(req, src_swap)
 
     # ------------------------------------------------------------------
     def _dispatcher(self):
@@ -415,28 +477,7 @@ class Simulation:
             if self.admission is not None:
                 self.admission.submit(req)
             else:
-                wid = self.global_sched.assign(req, self.workers)
-                if obs is not None:
-                    self.global_sched.observe_assign(req, wid)
-                self.workers[wid].submit(req)
-
-    def _fault_injector(self):
-        env = self.env
-        for f in sorted(self.spec.faults, key=lambda f: f.time):
-            delay = f.time - env.now
-            if delay > 0:
-                yield env.timeout(delay)
-            w = self.workers[f.worker]
-            if f.kind == "slowdown":
-                w.slowdown = f.factor
-            elif f.kind == "fail":
-                orphans = w.fail()
-                self.redispatch(orphans)
-            elif f.kind == "recover":
-                w.slowdown = 1.0
-                w.recover()
-            else:
-                raise ValueError(f.kind)
+                self._place(req)
 
     # ------------------------------------------------------------------
     def _sampler(self):
@@ -465,8 +506,8 @@ class Simulation:
     def run(self) -> Results:
         t0 = _time.perf_counter()
         self.env.process(self._dispatcher(), name="dispatcher")
-        if self.spec.faults:
-            self.env.process(self._fault_injector(), name="faults")
+        if self.fault_injector is not None:
+            self.fault_injector.start()
         if self.obs is not None and self.obs.ts is not None:
             self.env.process(self._sampler(), name="obs-sampler",
                              daemon=True)
@@ -514,6 +555,9 @@ class Simulation:
             or any(w.pp_span_time for w in self.workers) else None,
             stats=self.stats,
             max_live=self.max_live,
+            fault_events=self.fault_injector.events
+            if self.fault_injector is not None else None,
+            n_workers=len(self.workers),
             trace=self.obs.trace if self.obs is not None else None,
             timeseries=self.obs.ts if self.obs is not None else None)
 

@@ -79,6 +79,17 @@ class Worker:
         self.running: List[Request] = []
         self.alive = True
         self.slowdown = 1.0
+        #: draining (repro.core.faults): alive and finishing its queue,
+        #: but skipped by the global scheduler for new dispatches
+        self.draining = False
+        #: post-recovery warm-up (docs/RELIABILITY.md): the next
+        #: ``_warmup_left`` iterations cost ``_warmup_factor``x
+        self._warmup_left = 0
+        self._warmup_factor = 1.0
+        #: bumped by fail(); an iteration in flight across a failure
+        #: compares epochs after its timeout and discards its effects
+        #: (the batch died with the device)
+        self._fail_epoch = 0
         #: memory-over-time samples under stride-doubling decimation
         #: (repro.obs.timeseries.BoundedSeries): bounded on
         #: million-iteration runs, every iteration below the cap
@@ -230,6 +241,10 @@ class Worker:
             # swap transfers are PCIe-bound, not compute: they bill at
             # face value rather than scaling with the worker slowdown
             t_compute = self.backend.iteration_time(mix)
+            if self._warmup_left > 0:
+                # cold caches / recompiled kernels after a restart
+                t_compute *= self._warmup_factor
+                self._warmup_left -= 1
             breakdown = getattr(self.backend, "last_breakdown", None)
             if breakdown is not None:
                 # scale by the worker slowdown like the billed time, so
@@ -247,7 +262,14 @@ class Worker:
                 plan.draft_latency = \
                     self._draft_time(plan.spec_decode) * self.slowdown
                 t += plan.draft_latency
+            epoch = self._fail_epoch
             yield env.timeout(t)
+            if self._fail_epoch != epoch:
+                # the worker failed while this iteration was in flight:
+                # the batch is gone (orphans already re-dispatched), so
+                # applying its effects would double-emit tokens for
+                # requests now living on another worker
+                continue
             now = env.now
             self.iterations += 1
             self.busy_time += t
@@ -350,12 +372,26 @@ class Worker:
             req.prefill_done_len = 0
             req.cached_len = 0
 
-    def fail(self) -> List[Request]:
-        """Kill the worker; returns requests needing re-dispatch."""
+    def fail(self, *, kv_survives: bool = False) -> List[Request]:
+        """Kill the worker; returns requests needing re-dispatch.
+
+        Device KV always dies with the worker.  With ``kv_survives``
+        (``ChaosSpec.host_kv_survives``) victims whose KV is parked in
+        the host-DRAM swap tier keep their entry and progress — the
+        host memory outlives the worker process — so the re-dispatch
+        can adopt the copy into the new worker's tier instead of
+        re-prefilling (docs/RELIABILITY.md)."""
         self.alive = False
+        self._fail_epoch += 1
+        self._warmup_left = 0
         orphans = list(self.running) + list(self.waiting)
         for r in orphans:
             self.mem.free(r)
+            if kv_survives and self.swap is not None \
+                    and self.swap.holds(r):
+                r.preempt_count += 1
+                r.state = State.QUEUED
+                continue
             if self.swap is not None:
                 self.swap.drop(r)
             # restart from scratch (device and host KV lost)
@@ -370,6 +406,10 @@ class Worker:
         self._running_load = 0
         return orphans
 
-    def recover(self) -> None:
+    def recover(self, warmup_iters: int = 0,
+                warmup_factor: float = 1.0) -> None:
         self.alive = True
+        self.draining = False
+        self._warmup_left = warmup_iters
+        self._warmup_factor = warmup_factor
         self._wakeup()

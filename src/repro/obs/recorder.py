@@ -18,7 +18,7 @@ from repro.obs.attribution import (RequestObs, add_component, charge,
                                    finalize_request)
 from repro.obs.spec import ObsSpec
 from repro.obs.timeseries import TimeSeriesRecorder
-from repro.obs.trace import TraceRecorder
+from repro.obs.trace import TraceRecorder, WORKER_PID_BASE
 
 
 class ObsRecorder:
@@ -116,6 +116,15 @@ class ObsRecorder:
         """Failure re-dispatch / migration landing: back to a queue."""
         if self.trace is not None:
             self.trace.req_phase(req, "queue", now)
+
+    def on_fault(self, wid: int, kind: str, now: float,
+                 args=None) -> None:
+        """Fault-injection instant (repro.core.faults) on the worker's
+        trace lane: ``fault.fail`` / ``fault.recover`` /
+        ``fault.slowdown`` / ``fault.drain``."""
+        if self.trace is not None:
+            self.trace.instant(f"fault.{kind}", now,
+                               WORKER_PID_BASE + wid, args or {})
 
     def on_migrate_done(self, req, now: float, dur: float) -> None:
         if self.trace is not None:

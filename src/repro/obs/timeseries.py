@@ -20,11 +20,12 @@ from typing import Dict, List, Optional
 #: every column in the exported time series; scripts/check_docs.py
 #: asserts each is documented in docs/OBSERVABILITY.md.  Worker rows
 #: leave the cluster-only tail columns (n_live, n_finished, n_rejected)
-#: empty
+#: empty; ``n_alive`` is 0/1 per worker and the live-worker count on
+#: the cluster row (the downtime gauge, docs/RELIABILITY.md)
 TS_FIELDS = ("t", "scope", "queue_depth", "n_running", "kv_used_blocks",
              "kv_util", "swap_used_bytes", "tokens", "tokens_per_s",
-             "preempts", "iterations", "assigns", "n_live", "n_finished",
-             "n_rejected")
+             "preempts", "iterations", "assigns", "n_alive", "n_live",
+             "n_finished", "n_rejected")
 
 
 class BoundedSeries:
@@ -85,7 +86,8 @@ class TimeSeriesRecorder:
         rows: List[dict] = []
         tot = {"queue_depth": 0, "n_running": 0, "kv_used_blocks": 0,
                "kv_used": 0, "kv_total": 0, "swap_used_bytes": 0.0,
-               "tokens": 0, "preempts": 0, "iterations": 0, "assigns": 0}
+               "tokens": 0, "preempts": 0, "iterations": 0, "assigns": 0,
+               "n_alive": 0}
         for w in workers:
             used, free = w.mem.num_used, w.mem.num_free
             row = {"t": now, "scope": f"worker{w.wid}",
@@ -100,7 +102,8 @@ class TimeSeriesRecorder:
                        f"worker{w.wid}", now, w.tokens_emitted),
                    "preempts": w.preempt_events,
                    "iterations": w.iterations,
-                   "assigns": assigns.get(w.wid, 0)}
+                   "assigns": assigns.get(w.wid, 0),
+                   "n_alive": 1 if w.alive else 0}
             rows.append(row)
             tot["queue_depth"] += row["queue_depth"]
             tot["n_running"] += row["n_running"]
@@ -112,6 +115,7 @@ class TimeSeriesRecorder:
             tot["preempts"] += row["preempts"]
             tot["iterations"] += row["iterations"]
             tot["assigns"] += row["assigns"]
+            tot["n_alive"] += row["n_alive"]
         cluster = {"t": now, "scope": "cluster",
                    "queue_depth": tot["queue_depth"],
                    "n_running": tot["n_running"],
@@ -124,6 +128,7 @@ class TimeSeriesRecorder:
                    "preempts": tot["preempts"],
                    "iterations": tot["iterations"],
                    "assigns": tot["assigns"],
+                   "n_alive": tot["n_alive"],
                    "n_live": extra.get("n_live", 0),
                    "n_finished": extra.get("n_finished", 0),
                    "n_rejected": extra.get("n_rejected", 0)}

@@ -1,0 +1,435 @@
+"""Chaos layer (repro.core.faults, docs/RELIABILITY.md): property-based
+invariants under randomized fault schedules, KV-aware failover,
+costly-recovery semantics, availability accounting, and the
+fail-during-migration / fail-mid-swap-out regressions."""
+import math
+
+import pytest
+
+from repro.core import comm as comm_mod
+from repro.core.faults import (ChaosSpec, FaultEvent, FaultProcess,
+                               FaultSpec, FAULT_KINDS, load_fault_trace)
+from repro.core.metrics import AVAILABILITY_FIELDS
+from repro.core.simulator import SimSpec, Simulation, WorkerSpec, simulate
+from repro.core.workload import WorkloadSpec
+from repro.obs import ObsSpec
+
+from _hypothesis_compat import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _sig(res):
+    """Byte-level signature of a run: per-request ids and timestamps."""
+    return [(r.id, r.t_first_token, r.t_finish, tuple(r.token_times))
+            for r in sorted(res.requests, key=lambda r: r.id)]
+
+
+def _assert_exactly_once(res, n_expected):
+    """Every admitted request finishes exactly once: none lost, none
+    duplicated (a duplicated request double-emits tokens)."""
+    fin = [r for r in res.requests if r.t_finish is not None]
+    assert len(fin) == n_expected, \
+        f"lost requests: {n_expected - len(fin)}"
+    ids = [r.id for r in res.requests]
+    assert len(ids) == len(set(ids)), "duplicated request objects"
+    for r in fin:
+        assert r.tokens_generated == r.output_len, r.id
+        assert len(r.token_times) == r.output_len, r.id
+        assert all(b >= a for a, b in zip(r.token_times,
+                                          r.token_times[1:])), r.id
+
+
+def _assert_attribution_conserved(res, tol=1e-6):
+    for r in res.requests:
+        if r.t_finish is None or r.obs is None or r.obs.final is None:
+            continue
+        f = r.obs.final
+        ttft = r.t_first_token - r.arrival_time
+        assert abs(sum(f["ttft"].values()) - ttft) < tol, r.id
+        dec = r.t_finish - r.t_first_token
+        assert abs(sum(f["decode"].values()) - dec) < tol, r.id
+
+
+# ---------------------------------------------------------------------------
+# property suite: randomized fault schedules x preemption x accounting
+# ---------------------------------------------------------------------------
+_SCHEDULE = st.lists(
+    st.tuples(st.integers(0, 1),          # worker
+              st.integers(5, 50),         # fault time, deciseconds
+              st.integers(5, 25),         # duration, deciseconds
+              st.sampled_from(["fail", "degrade", "drain"])),
+    max_size=3)
+
+
+def _build(schedule, mode, streaming):
+    faults = [FaultSpec(time=t / 10.0, worker=w, kind=kind,
+                        factor=3.0 if kind == "degrade" else 1.0,
+                        duration=d / 10.0)
+              for w, t, d, kind in schedule]
+    return SimSpec(
+        workers=[WorkerSpec(gpu_mem_util=0.25),
+                 WorkerSpec(gpu_mem_util=0.25)],
+        workload=WorkloadSpec(num_requests=60, qps=25.0, seed=9),
+        preemption_mode=mode,
+        streaming=streaming,
+        faults=faults,
+        chaos=ChaosSpec(reload_time=0.5, warmup_iters=1,
+                        warmup_factor=2.0),
+        obs=ObsSpec(attribution=True))
+
+
+@settings(max_examples=10)
+@given(schedule=_SCHEDULE,
+       mode=st.sampled_from(["recompute", "swap"]),
+       streaming=st.sampled_from([False, True]))
+def test_chaos_invariants(schedule, mode, streaming):
+    """Under any fault schedule, in either preemption mode and either
+    arrival mode: every request finishes exactly once, latency
+    attribution still sums to the measured TTFT/decode spans, and the
+    same seed reproduces the run byte-for-byte."""
+    r1 = simulate(_build(schedule, mode, streaming))
+    _assert_exactly_once(r1, 60)
+    _assert_attribution_conserved(r1)
+    r2 = simulate(_build(schedule, mode, streaming))
+    assert _sig(r1) == _sig(r2)
+    assert (r1.fault_events or []) == (r2.fault_events or [])
+
+
+# ---------------------------------------------------------------------------
+# zero-fault chaos is byte-identical to the baseline
+# ---------------------------------------------------------------------------
+def test_zero_fault_chaos_byte_identical():
+    base = dict(workers=[WorkerSpec(), WorkerSpec()],
+                workload=WorkloadSpec(num_requests=100, qps=10.0, seed=3))
+    r0 = simulate(SimSpec(**base))
+    r1 = simulate(SimSpec(**base, chaos=ChaosSpec()))
+    assert _sig(r0) == _sig(r1)
+    assert r0.sim_time == r1.sim_time
+
+
+# ---------------------------------------------------------------------------
+# stochastic processes
+# ---------------------------------------------------------------------------
+def _stochastic_spec(seed=7):
+    return SimSpec(
+        workers=[WorkerSpec(), WorkerSpec()],
+        workload=WorkloadSpec(num_requests=120, qps=8.0, seed=3),
+        chaos=ChaosSpec(
+            processes=(FaultProcess(worker=0, mtbf=6.0, mttr=1.0,
+                                    seed=seed),
+                       FaultProcess(worker=1, mtbf=9.0, mttr=1.0,
+                                    seed=seed)),
+            reload_time=2.0))
+
+
+def test_stochastic_failures_no_loss_and_reproducible():
+    r1 = simulate(_stochastic_spec())
+    _assert_exactly_once(r1, 120)
+    assert r1.fault_events, "MTBF of 6-9s must fire within the run"
+    av1 = r1.availability_summary()
+    av2 = simulate(_stochastic_spec()).availability_summary()
+    assert av1 == av2, "same seed must reproduce availability exactly"
+    # a different seed draws a different fault timeline
+    r3 = simulate(_stochastic_spec(seed=8))
+    assert r3.fault_events != r1.fault_events
+
+
+def test_availability_summary_accounting():
+    r = simulate(_stochastic_spec())
+    av = r.availability_summary(target=0.995)
+    assert set(av) == set(AVAILABILITY_FIELDS)
+    assert 0.0 <= av["service_availability"] <= 1.0
+    assert 0.0 <= av["capacity_availability"] <= 1.0
+    # capacity counts every lost replica, service only total outages
+    assert av["capacity_availability"] <= av["service_availability"]
+    assert av["n_failures"] > 0 and av["capacity_downtime_s"] > 0
+    # recovery cost (mttr draw + 2s reload) counts as downtime
+    assert av["mttr_observed_s"] > 2.0
+    assert av["request_success_rate"] == 1.0
+    # error budget: 30-day window at 99.5% = 0.005 * window seconds,
+    # consumed scaled by observed downtime rate
+    month = 30 * 86400.0
+    avm = r.availability_summary(target=0.995, window=month)
+    assert avm["error_budget_s"] == pytest.approx(0.005 * month)
+    assert avm["budget_consumed_s"] == pytest.approx(
+        av["service_downtime_s"] * month / r.sim_time)
+    assert avm["burn_rate"] == pytest.approx(
+        (1.0 - av["service_availability"]) / 0.005)
+    assert avm["burn_rate"] == pytest.approx(av["burn_rate"])
+
+
+def test_oom_crash_loop_fires_consecutive_failures():
+    r = simulate(SimSpec(
+        workers=[WorkerSpec(), WorkerSpec()],
+        workload=WorkloadSpec(num_requests=100, qps=8.0, seed=3),
+        chaos=ChaosSpec(
+            processes=(FaultProcess(worker=0, kind="oom_crash_loop",
+                                    mtbf=5.0, mttr=0.5, seed=1,
+                                    max_events=1, crash_loops=3),),
+            reload_time=0.2)))
+    _assert_exactly_once(r, 100)
+    av = r.availability_summary()
+    assert av["n_failures"] == 3
+    kinds = [e.kind for e in r.fault_events]
+    assert kinds == ["fail", "recover"] * 3
+
+
+def test_degrade_process_slows_then_restores():
+    spec = SimSpec(
+        workers=[WorkerSpec(), WorkerSpec()],
+        workload=WorkloadSpec(num_requests=100, qps=8.0, seed=3),
+        chaos=ChaosSpec(
+            processes=(FaultProcess(worker=0, kind="degrade", mtbf=4.0,
+                                    mttr=2.0, seed=2, max_events=2),)))
+    sim = Simulation(spec)
+    r = sim.run()
+    _assert_exactly_once(r, 100)
+    assert sim.workers[0].slowdown == 1.0, "degrade must auto-restore"
+    av = r.availability_summary()
+    assert av["degraded_s"] > 0.0
+    assert av["n_failures"] == 0, "a straggler serves, slowly"
+    assert av["service_availability"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# scheduled kinds: drain, duration auto-recover, costly recovery
+# ---------------------------------------------------------------------------
+def test_drain_stops_new_dispatches_until_restored():
+    spec = SimSpec(
+        workers=[WorkerSpec(), WorkerSpec()],
+        workload=WorkloadSpec(num_requests=80, qps=20.0, seed=5),
+        faults=[FaultSpec(time=0.0, worker=0, kind="drain",
+                          duration=1000.0)])
+    sim = Simulation(spec)
+    r = sim.run()
+    _assert_exactly_once(r, 80)
+    assert sim.workers[1].tokens_emitted == sum(
+        q.output_len for q in r.requests), \
+        "a draining worker must receive no new dispatches"
+
+
+def test_scheduled_fail_duration_auto_recovers():
+    r = simulate(SimSpec(
+        workers=[WorkerSpec(), WorkerSpec()],
+        workload=WorkloadSpec(num_requests=80, qps=8.0, seed=3),
+        faults=[FaultSpec(time=2.0, worker=0, kind="fail",
+                          duration=1.0)],
+        chaos=ChaosSpec(reload_time=0.5)))
+    _assert_exactly_once(r, 80)
+    assert [(e.time, e.kind) for e in r.fault_events] == \
+        [(2.0, "fail"), (3.5, "recover")]
+    av = r.availability_summary()
+    assert av["downtime_per_worker"][0] == pytest.approx(1.5)
+    assert av["downtime_per_worker"][1] == 0.0
+
+
+def test_recovery_cost_reduces_availability():
+    def run(reload):
+        return simulate(SimSpec(
+            workers=[WorkerSpec()],
+            workload=WorkloadSpec(num_requests=60, qps=6.0, seed=3),
+            faults=[FaultSpec(time=2.0, worker=0, kind="fail",
+                              duration=1.0)],
+            chaos=ChaosSpec(reload_time=reload, warmup_iters=0)))
+    cheap = run(0.0)
+    costly = run(5.0)
+    _assert_exactly_once(cheap, 60)
+    _assert_exactly_once(costly, 60)
+    assert costly.availability_summary()["service_downtime_s"] == \
+        pytest.approx(6.0)
+    assert cheap.availability_summary()["service_downtime_s"] == \
+        pytest.approx(1.0)
+    assert costly.availability_summary()["service_availability"] < \
+        cheap.availability_summary()["service_availability"]
+
+
+def test_warmup_iterations_cost_extra_time():
+    def run(warmup_iters):
+        return simulate(SimSpec(
+            workers=[WorkerSpec()],
+            workload=WorkloadSpec(num_requests=60, qps=6.0, seed=3),
+            faults=[FaultSpec(time=2.0, worker=0, kind="fail",
+                              duration=1.0)],
+            chaos=ChaosSpec(reload_time=0.0, warmup_iters=warmup_iters,
+                            warmup_factor=3.0)))
+    cold = run(200)
+    warm = run(0)
+    _assert_exactly_once(cold, 60)
+    assert cold.sim_time > warm.sim_time
+
+
+def test_all_workers_down_parks_arrivals():
+    """A cluster-wide outage must hold arrivals at the dispatcher and
+    serve them after recovery instead of crashing the scheduler."""
+    r = simulate(SimSpec(
+        workers=[WorkerSpec()],
+        workload=WorkloadSpec(num_requests=60, qps=20.0, seed=5),
+        faults=[FaultSpec(time=1.0, worker=0, kind="fail",
+                          duration=2.0)],
+        chaos=ChaosSpec(reload_time=0.5)))
+    _assert_exactly_once(r, 60)
+    assert r.availability_summary()["service_availability"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# KV-aware failover (composes with preemption_mode="swap")
+# ---------------------------------------------------------------------------
+def _swap_pressure_spec(survive):
+    return SimSpec(
+        workers=[WorkerSpec(gpu_mem_util=0.19),
+                 WorkerSpec(gpu_mem_util=0.19)],
+        workload=WorkloadSpec(num_requests=80, qps=40.0, seed=4,
+                              lengths="fixed", prompt_len=512,
+                              output_len=64),
+        preemption_mode="swap",
+        faults=[FaultSpec(time=3.0, worker=0, kind="fail")],
+        chaos=ChaosSpec(reload_time=1.0, host_kv_survives=survive))
+
+
+def test_host_kv_survives_failover_and_beats_recompute():
+    """A victim whose KV sits in host DRAM when its worker dies resumes
+    from swap on the new worker (the host tier outlives the worker
+    process): adoption must happen, nothing may leak, and mean TTFT
+    must beat the full-recompute policy."""
+    surv = simulate(_swap_pressure_spec(True))
+    reco = simulate(_swap_pressure_spec(False))
+    _assert_exactly_once(surv, 80)
+    _assert_exactly_once(reco, 80)
+    assert sum(s["adopted"] for s in surv.swap_stats.values()) > 0
+    assert sum(s["adopted"] for s in reco.swap_stats.values()) == 0
+    for res in (surv, reco):
+        # no host-DRAM leak: every byte accounted on either tier drains
+        assert all(s["used_bytes"] == 0.0
+                   for s in res.swap_stats.values())
+    mean_ttft = lambda res: sum(  # noqa: E731
+        q.ttft for q in res.finished) / len(res.finished)
+    assert mean_ttft(surv) < mean_ttft(reco)
+
+
+def test_fail_mid_swap_out_no_host_leak_under_chaos():
+    """Killing a worker whose in-flight iteration bills a swap-out must
+    release the host bytes (or hand them to the adopting tier) — no
+    stranded victims, no leaked capacity, repeatedly."""
+    r = simulate(SimSpec(
+        workers=[WorkerSpec(gpu_mem_util=0.19),
+                 WorkerSpec(gpu_mem_util=0.19)],
+        workload=WorkloadSpec(num_requests=80, qps=40.0, seed=4,
+                              lengths="fixed", prompt_len=512,
+                              output_len=64),
+        preemption_mode="swap",
+        chaos=ChaosSpec(
+            processes=(FaultProcess(worker=0, mtbf=2.0, mttr=0.5,
+                                    seed=11),
+                       FaultProcess(worker=1, mtbf=3.0, mttr=0.5,
+                                    seed=11)),
+            reload_time=0.5)))
+    _assert_exactly_once(r, 80)
+    assert all(s["used_bytes"] == 0.0 for s in r.swap_stats.values())
+    assert all(s["used_bytes"] >= 0.0 for s in r.swap_stats.values())
+
+
+# ---------------------------------------------------------------------------
+# fail during migration (disagg_pd)
+# ---------------------------------------------------------------------------
+def test_fail_during_migration_no_duplication():
+    """The source worker dying while a request's KV is on the wire must
+    not deliver the migration: fail() already re-dispatched the request,
+    and a late receive_migrated() would run it on two workers at once.
+    A slow kv_link stretches every transfer so scheduled failures land
+    inside migration windows."""
+    for t_fail in (1.0, 2.0, 3.0, 5.0):
+        r = simulate(SimSpec(
+            workers=[WorkerSpec(role="prefill"),
+                     WorkerSpec(role="decode")],
+            global_policy="disagg",
+            workload=WorkloadSpec(num_requests=40, qps=10.0, seed=2),
+            kv_link=comm_mod.LinkSpec("slow", bandwidth=2e9,
+                                      latency=1e-3),
+            faults=[FaultSpec(time=t_fail, worker=0, kind="fail",
+                              duration=1.5)],
+            chaos=ChaosSpec(reload_time=0.5)))
+        _assert_exactly_once(r, 40)
+
+
+def test_fail_migration_target_reprefills():
+    """The decode-side worker dying mid-transfer loses the arriving KV
+    with the device: the request must re-prefill elsewhere, exactly
+    once."""
+    for t_fail in (1.0, 2.5, 4.0):
+        r = simulate(SimSpec(
+            workers=[WorkerSpec(role="prefill"),
+                     WorkerSpec(role="decode")],
+            global_policy="disagg",
+            workload=WorkloadSpec(num_requests=40, qps=10.0, seed=2),
+            kv_link=comm_mod.LinkSpec("slow", bandwidth=2e9,
+                                      latency=1e-3),
+            faults=[FaultSpec(time=t_fail, worker=1, kind="fail",
+                              duration=1.5)],
+            chaos=ChaosSpec(reload_time=0.5)))
+        _assert_exactly_once(r, 40)
+
+
+# ---------------------------------------------------------------------------
+# observability integration
+# ---------------------------------------------------------------------------
+def test_fault_instants_and_n_alive_gauge():
+    from repro.obs import validate_chrome_trace
+
+    r = simulate(SimSpec(
+        workers=[WorkerSpec(), WorkerSpec()],
+        workload=WorkloadSpec(num_requests=80, qps=8.0, seed=3),
+        faults=[FaultSpec(time=2.0, worker=0, kind="fail",
+                          duration=2.0)],
+        chaos=ChaosSpec(reload_time=1.0),
+        obs=ObsSpec(trace=True, timeseries=True,
+                    sample_interval=0.5)))
+    _assert_exactly_once(r, 80)
+    names = [e["name"] for e in r.trace.events]
+    assert "fault.fail" in names and "fault.recover" in names
+    assert validate_chrome_trace(r.trace.to_json()) == []
+    cluster = r.timeseries.rows("cluster")
+    alive = {row["n_alive"] for row in cluster}
+    assert 2 in alive and 1 in alive, \
+        "n_alive must dip during the outage"
+
+
+# ---------------------------------------------------------------------------
+# misc surface: trace loading, validation, registry
+# ---------------------------------------------------------------------------
+def test_load_fault_trace_jsonl(tmp_path):
+    p = tmp_path / "faults.jsonl"
+    p.write_text('{"time": 1.5, "worker": 0, "kind": "fail", '
+                 '"duration": 2.0}\n'
+                 '\n'
+                 '{"time": 4.0, "worker": 1, "kind": "degrade", '
+                 '"factor": 3.0}\n')
+    faults = load_fault_trace(str(p))
+    assert faults == [
+        FaultSpec(time=1.5, worker=0, kind="fail", duration=2.0),
+        FaultSpec(time=4.0, worker=1, kind="degrade", factor=3.0)]
+    r = simulate(SimSpec(
+        workers=[WorkerSpec(), WorkerSpec()],
+        workload=WorkloadSpec(num_requests=60, qps=8.0, seed=3),
+        faults=faults, chaos=ChaosSpec(reload_time=0.5)))
+    _assert_exactly_once(r, 60)
+
+
+def test_fault_validation_errors():
+    base = dict(workers=[WorkerSpec()],
+                workload=WorkloadSpec(num_requests=5, qps=5.0, seed=0))
+    with pytest.raises(ValueError):
+        simulate(SimSpec(**base,
+                         faults=[FaultSpec(1.0, 3, "fail")]))
+    with pytest.raises(ValueError):
+        simulate(SimSpec(**base, chaos=ChaosSpec(
+            processes=(FaultProcess(worker=0, kind="meteor"),))))
+    assert set(FAULT_KINDS) >= {"fail", "recover", "slowdown",
+                                "degrade", "drain", "oom_crash_loop"}
+
+
+def test_fault_event_log_is_frozen_records():
+    ev = FaultEvent(1.0, 0, "fail")
+    with pytest.raises(Exception):
+        ev.time = 2.0

@@ -1,0 +1,114 @@
+"""Unit tests for repro.distributed.fault: StragglerDetector window and
+warm-up semantics, and the run_with_restarts supervisor loop."""
+import pytest
+
+from repro.distributed.fault import (InjectedFailure, StragglerDetector,
+                                     run_with_restarts)
+
+
+# ---------------------------------------------------------------------------
+# StragglerDetector
+# ---------------------------------------------------------------------------
+def test_straggler_window_eviction():
+    det = StragglerDetector(window=8)
+    for i in range(10):
+        det.record(float(i))
+    assert len(det._times) == 8
+    assert det._times == [float(i) for i in range(2, 10)]
+
+
+def test_straggler_warmup_under_eight_samples():
+    det = StragglerDetector()
+    for _ in range(6):
+        assert det.record(1.0) is False
+    # 7th sample is huge but the detector is still warming up
+    assert det.record(1000.0) is False
+    # 8th sample crosses the warm-up threshold and may flag
+    assert det.record(1000.0) is True
+
+
+def test_straggler_exact_factor_boundary_is_not_flagged():
+    det = StragglerDetector(factor=3.0)
+    for _ in range(8):
+        det.record(1.0)
+    # median including the new sample stays 1.0; 3.0 == factor * med is
+    # a strict comparison, so the boundary itself is not a straggler
+    assert det.record(3.0) is False
+    assert det.record(3.0001) is True
+
+
+def test_straggler_median_tracks_drift():
+    det = StragglerDetector(factor=3.0, window=8)
+    for _ in range(8):
+        det.record(1.0)
+    # after the window fills with slower iterations, the old baseline
+    # is evicted and the same absolute time stops being a straggler
+    for _ in range(8):
+        det.record(2.0)
+    assert det.record(4.0) is False
+
+
+# ---------------------------------------------------------------------------
+# run_with_restarts
+# ---------------------------------------------------------------------------
+class _Trainer:
+    """Checkpoint-restoring trainer stub: ``step`` persists across
+    rebuilds (the checkpoint), ``fail_at`` raises once per listed step."""
+
+    def __init__(self, state, fail_at=None):
+        self.state = state
+        self.step = state["step"]
+        # shared across rebuilds so a consumed failure stays consumed
+        self._fail_at = fail_at if fail_at is not None else set()
+        state["builds"] = state.get("builds", 0) + 1
+
+    def run(self, remaining, log=None):
+        for _ in range(remaining):
+            if self.step in self._fail_at:
+                self._fail_at.discard(self.step)
+                raise InjectedFailure(f"node lost at step {self.step}")
+            self.step += 1
+            self.state["step"] = self.step
+
+
+def test_restarts_resume_from_checkpoint_and_finish():
+    state = {"step": 0}
+    fail_at = {3, 7}
+    tr = run_with_restarts(lambda: _Trainer(state, fail_at),
+                           num_steps=10, max_restarts=3, log=None)
+    assert tr.step == 10
+    assert state["builds"] == 3          # initial + one per failure
+
+
+def test_returns_early_when_checkpoint_already_complete():
+    state = {"step": 10}
+
+    class _NeverRun(_Trainer):
+        def run(self, remaining, log=None):
+            raise AssertionError("run() must not be called")
+
+    tr = run_with_restarts(lambda: _NeverRun(state), num_steps=10,
+                           log=None)
+    assert tr.step == 10
+
+
+def test_reraises_after_max_restarts():
+    state = {"step": 0}
+
+    def make():
+        t = _Trainer(state)
+        t._fail_at = {t.step}            # always fails immediately
+        return t
+
+    with pytest.raises(InjectedFailure):
+        run_with_restarts(make, num_steps=10, max_restarts=2, log=None)
+    assert state["builds"] == 3          # initial try + 2 restarts
+
+
+def test_restart_log_messages_emitted():
+    state = {"step": 0}
+    fail_at = {2}
+    lines = []
+    run_with_restarts(lambda: _Trainer(state, fail_at), num_steps=5,
+                      max_restarts=3, log=lines.append)
+    assert any("restart 1/3" in ln for ln in lines)
