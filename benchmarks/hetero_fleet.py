@@ -1,0 +1,182 @@
+"""Heterogeneous fleet economics (docs/HETEROGENEITY.md): mixed
+hardware and mixed models in one cluster.
+
+Part A reproduces the paper's hardware-substitution economics on the
+cheap-decode axis: a disaggregated fleet that prefilllls on one A100 and
+decodes on L4s (bandwidth-per-dollar cards) against a homogeneous
+all-A100 fleet of the same slot count, at the same offered load and the
+same SLOs.  The finding: **the split fleet wins on $/1M generated
+tokens at equal SLO attainment** — prefill is FLOPs-bound (keep the
+A100), decode is bandwidth-bound (L4 at 1/5 the price covers it), so
+the dollar-weighted fleet price drops faster than the tail grows.
+``spec_price`` (repro.explore.sweep) prices exactly the fleet the
+simulator builds, pinned by tests/test_hetero_fleet.py.
+
+Part B demonstrates multi-model serving: two models pinned to disjoint
+worker pools (llama2-7b on A100s, qwen2-0.5b on L4s) behind the
+``model_routed`` global policy, with per-model latency/SLO breakdowns
+read from ``Results.model_summary()``.  The routing invariant — no
+worker ever serves a model it does not host — is asserted on every run,
+not sampled.
+
+``--smoke`` runs both parts at CI scale and hard-asserts the cost win
+and the zero-cross-dispatch invariant (wired into scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.core.simulator import SimSpec, WorkerSpec, simulate
+from repro.core.tenancy import TenantSpec, TenantTier
+from repro.core.workload import WorkloadSpec
+from repro.explore.sweep import spec_price
+
+from benchmarks.common import Bench, fmt
+
+BIG, SMALL = "llama2-7b", "qwen2-0.5b"
+#: generous enough that both fleets attain ~all of them at the offered
+#: load — the comparison is $/token at *equal* attainment, not a tail
+#: shoot-out (the split fleet's decode is slower per token, just not
+#: SLO-violating)
+TTFT_SLO, MTPOT_SLO = 10.0, 0.3
+
+
+# ---------------------------------------------------------------------------
+# Part A: split prefill/decode fleet vs homogeneous, $/1M tokens
+# ---------------------------------------------------------------------------
+def _fleet_specs(n_req: int, qps: float):
+    """(label, SimSpec) pairs for the 4-slot fleet comparison."""
+    wl = WorkloadSpec(num_requests=n_req, qps=qps, seed=0,
+                      lengths="fixed", prompt_len=256, output_len=128)
+    homo = SimSpec(
+        arch=BIG, workers=[WorkerSpec(hw="A100") for _ in range(4)],
+        global_policy="least_loaded", workload=wl)
+    split = SimSpec(
+        arch=BIG,
+        workers=[WorkerSpec(hw="A100", role="prefill")] +
+                [WorkerSpec(hw="L4", role="decode") for _ in range(3)],
+        global_policy="disagg", workload=wl)
+    return [("homogeneous_4xA100", homo),
+            ("split_1xA100p_3xL4d", split)]
+
+
+def _economics(spec: SimSpec):
+    """(cost per 1M generated tokens, SLO attainment, finished) — the
+    row Part A compares across fleets."""
+    res = simulate(spec)
+    fin = res.finished
+    tokens = sum(r.tokens_generated for r in fin)
+    n_ok = sum(1 for r in fin if r.meets_slo(TTFT_SLO, MTPOT_SLO))
+    attain = n_ok / len(fin) if fin else 0.0
+    cost_1m = spec_price(spec) * res.sim_time / tokens * 1e6 \
+        if tokens else float("nan")
+    return cost_1m, attain, len(fin), res
+
+
+def run_cost_comparison(b: Bench, n_req: int, qps: float):
+    """Part A driver: returns {label: (cost_1m, attainment)}."""
+    out = {}
+    for label, spec in _fleet_specs(n_req, qps):
+        cost_1m, attain, n_fin, res = _economics(spec)
+        out[label] = (cost_1m, attain)
+        b.add(part="cost", fleet=label, price=fmt(spec_price(spec), 2),
+              finished=n_fin, slo_attainment=fmt(attain),
+              cost_per_1M_tokens=fmt(cost_1m, 2),
+              p99_ttft=fmt(res.latency_stats()["p99"], 3))
+    return out
+
+
+def assert_cost_win(out):
+    """The split fleet must be cheaper per token at (near-)equal SLO
+    attainment — the reproduced finding, gated in CI."""
+    c_homo, a_homo = out["homogeneous_4xA100"]
+    c_split, a_split = out["split_1xA100p_3xL4d"]
+    assert c_split < c_homo, \
+        f"split fleet should be cheaper: {c_split:.1f} >= {c_homo:.1f}"
+    assert a_split >= 0.99 * a_homo, \
+        f"cost win must hold at equal SLO: {a_split:.3f} < {a_homo:.3f}"
+    return c_homo / c_split
+
+
+# ---------------------------------------------------------------------------
+# Part B: two models on disjoint pools behind model_routed
+# ---------------------------------------------------------------------------
+def _multi_model_spec(n_each: int) -> SimSpec:
+    tier = TenantTier()
+    return SimSpec(
+        arch=BIG,
+        workers=[WorkerSpec(hw="A100"), WorkerSpec(hw="A100"),
+                 WorkerSpec(hw="L4", arch=SMALL),
+                 WorkerSpec(hw="L4", arch=SMALL)],
+        global_policy="model_routed",
+        tenants=[
+            TenantSpec(tenant_id="big", tier=tier,
+                       workload=WorkloadSpec(num_requests=n_each,
+                                             qps=4.0, seed=1,
+                                             model=BIG)),
+            TenantSpec(tenant_id="small", tier=tier,
+                       workload=WorkloadSpec(num_requests=n_each,
+                                             qps=8.0, seed=2,
+                                             model=SMALL))])
+
+
+def run_model_routing(b: Bench, n_each: int):
+    """Part B driver: route two models, assert the invariant, report
+    per-model summaries.  Returns the Results."""
+    spec = _multi_model_spec(n_each)
+    res = simulate(spec)
+    fin = [r for r in res.requests if r.t_finish is not None]
+    assert len(fin) == 2 * n_each, \
+        f"lost {2 * n_each - len(fin)} requests"
+    # routing invariant: every worker served only its hosted model
+    hosted = {wid: m for wid, m in (res.worker_models or {}).items()}
+    for r in fin:
+        assert hosted[r.worker_id] == r.model, \
+            f"request {r.id} ({r.model}) ran on worker " \
+            f"{r.worker_id} hosting {hosted[r.worker_id]}"
+    summary = res.model_summary(ttft_slo=TTFT_SLO, mtpot_slo=MTPOT_SLO)
+    assert set(summary) == {BIG, SMALL}
+    for model in sorted(summary):
+        row = summary[model]
+        b.add(part="routing", fleet=model, price="",
+              finished=row["n_finished"],
+              slo_attainment=fmt(row["slo_attainment"]),
+              cost_per_1M_tokens="",
+              p99_ttft=fmt(row["ttft_p99"], 3))
+    return res, summary
+
+
+# ---------------------------------------------------------------------------
+def run(quick: bool = False):
+    """Driver entry point (benchmarks/run.py)."""
+    b = Bench("hetero_fleet")
+    n_req = 120 if quick else 400
+    out = run_cost_comparison(b, n_req, qps=4.0)
+    ratio = assert_cost_win(out)
+    _, summary = run_model_routing(b, 60 if quick else 200)
+    b.finish(derived=f"split_fleet_cost_win={ratio:.2f}x"
+                     f"_models={len(summary)}")
+    return out
+
+
+def main(argv) -> int:
+    if "--smoke" in argv:
+        # CI gates (scripts/ci.sh): cost win + exact routing at CI scale
+        b = Bench("hetero_fleet_smoke")
+        out = run_cost_comparison(b, n_req=80, qps=4.0)
+        ratio = assert_cost_win(out)
+        print(f"cost-win OK: split fleet {ratio:.2f}x cheaper per 1M "
+              f"tokens at equal SLO attainment")
+        res, summary = run_model_routing(b, n_each=40)
+        print(f"model-routing OK: 80/80 finished, zero cross-model "
+              f"dispatches, per-model p99 TTFT "
+              + ", ".join(f"{m}={summary[m]['ttft_p99']:.3f}s"
+                          for m in sorted(summary)))
+        b.finish(derived=f"cost_win={ratio:.2f}x_routing_exact")
+        return 0
+    run(quick="--quick" in argv)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

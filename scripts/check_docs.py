@@ -26,7 +26,11 @@ Checks:
   7. every fault kind (``FAULT_KINDS``) and every
      ``Results.availability_summary()`` field
      (``AVAILABILITY_FIELDS``) appears as a code-span in
-     docs/RELIABILITY.md — new chaos surface without docs fails CI.
+     docs/RELIABILITY.md — new chaos surface without docs fails CI,
+  8. the ``model_routed`` policy and every
+     ``Results.model_summary()`` key (``MODEL_SUMMARY_FIELDS``)
+     appears as a code-span in docs/HETEROGENEITY.md — new
+     multi-model surface without docs fails CI.
 
 Run:  python scripts/check_docs.py        (exits non-zero on failure)
 """
@@ -228,6 +232,28 @@ def check_reliability_docs() -> list:
     return errors
 
 
+def check_heterogeneity_docs() -> list:
+    """The model-routing policy and every per-model summary key must be
+    documented as a `code span` in docs/HETEROGENEITY.md."""
+    from repro.core.metrics import MODEL_SUMMARY_FIELDS
+
+    errors = []
+    path = os.path.join(ROOT, "docs", "HETEROGENEITY.md")
+    if not os.path.exists(path):
+        return ["docs/HETEROGENEITY.md: missing (multi-model doc "
+                "coverage needs it)"]
+    with open(path) as f:
+        text = f.read()
+    groups = [("routing policy", ["model_routed"]),
+              ("model_summary field", MODEL_SUMMARY_FIELDS)]
+    for what, names in groups:
+        for n in names:
+            if f"`{n}`" not in text and f'`"{n}"`' not in text:
+                errors.append(f"{what} `{n}` not documented in "
+                              f"docs/HETEROGENEITY.md")
+    return errors
+
+
 def main() -> int:
     errors = []
     docs = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
@@ -242,6 +268,7 @@ def main() -> int:
     errors.extend(check_parallelism_docs())
     errors.extend(check_observability_docs())
     errors.extend(check_reliability_docs())
+    errors.extend(check_heterogeneity_docs())
     for e in errors:
         print(f"docs-check FAIL: {e}")
     if not errors:
@@ -249,7 +276,8 @@ def main() -> int:
         print(f"docs-check OK: {n} markdown files, links + anchors resolve, "
               f"all benchmarks/examples have module docstrings, all "
               f"policies/workload kinds and memory/parallelism/"
-              f"observability/reliability registries documented")
+              f"observability/reliability/heterogeneity registries "
+              f"documented")
     return 1 if errors else 0
 
 

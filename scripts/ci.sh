@@ -49,13 +49,17 @@ stage "benchmarks: registry + smoke-gate wiring" \
     env PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/run.py --check-registry
 
-stage "tier-1: pytest" \
-    python -m pytest -x -q
-
 if [[ "$QUICK" == "1" ]]; then
+    # the slow marker (pytest.ini) drops the multi-second JAX model
+    # tests from the local pre-commit loop; the full gate runs them all
+    stage "tier-1: pytest (-m 'not slow')" \
+        python -m pytest -x -q -m "not slow"
     echo "(--quick: skipping smokes)"
     exit 0
 fi
+
+stage "tier-1: pytest" \
+    python -m pytest -x -q
 
 # the example output (not the stage banner) goes to /dev/null, so the
 # redirect lives inside the staged command
@@ -96,6 +100,14 @@ stage "smoke: parallelism crossover + bubble gates" \
 stage "smoke: chaos availability + no-loss gates" \
     env PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     timeout 300 python benchmarks/chaos_sweep.py --smoke
+
+# heterogeneity gates (docs/HETEROGENEITY.md): the split A100-prefill +
+# L4-decode fleet beats homogeneous 4xA100 on $/1M generated tokens at
+# equal SLO attainment, and model routing never cross-dispatches on a
+# two-model fleet (per-model summaries populated)
+stage "smoke: hetero fleet economics + routing gates" \
+    env PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    timeout 120 python benchmarks/hetero_fleet.py --smoke
 
 # observability gates (docs/OBSERVABILITY.md): exported Chrome trace
 # validates (spans nest, durations sum to latency within 1e-6),

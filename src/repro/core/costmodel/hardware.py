@@ -68,6 +68,13 @@ G6_AIM = HardwareSpec("G6-AiM", flops=26e12, mem_bw=2.0e12, mem_cap=32e9,
 TPU_V5E = HardwareSpec("TPUv5e", flops=197e12, mem_bw=819e9, mem_cap=16e9,
                        link_bw=50e9, pcie_bw=16e9, host_mem_cap=128e9,
                        price=0.35)
+#: NVIDIA L4 — the cheap inference card (Ada, 24 GB GDDR6): weak on
+#: prefill FLOPs but plenty of bandwidth-per-dollar for small-model
+#: decode, which is what makes the mixed A100-prefill + L4-decode
+#: fleets in benchmarks/hetero_fleet.py win on $/token
+L4 = HardwareSpec("L4", flops=121e12, mem_bw=300e9, mem_cap=24e9,
+                  link_bw=64e9, pcie_bw=16e9, host_mem_cap=64e9,
+                  price=0.2)
 #: CPU host executing the real JAX engine in this container; calibrated
 #: via TabularBackend, the static numbers are only a seed.  KV "swap"
 #: target is its own DRAM, so pcie_bw degrades to a memcpy.
@@ -77,7 +84,8 @@ CPU_HOST = HardwareSpec("CPU", flops=2e11, mem_bw=40e9, mem_cap=32e9,
                         iter_overhead=1e-3)
 
 HARDWARE = {h.name: h for h in
-            [A100, A100_40G, A100_LOW, V100, G6_AIM, TPU_V5E, CPU_HOST]}
+            [A100, A100_40G, A100_LOW, V100, G6_AIM, TPU_V5E, L4,
+             CPU_HOST]}
 
 
 # ---------------------------------------------------------------------------

@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import json
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import List, Optional, Sequence
 
 from repro.distributed.fault import StragglerDetector
@@ -101,6 +101,12 @@ class FaultProcess:
     max_events: int = 0           # 0 = unbounded
     crash_loops: int = 3          # fail/repair cycles per oom trigger
     loop_uptime: float = 1.0      # healthy gap inside a crash loop
+    #: target a model instead of a worker id (docs/HETEROGENEITY.md):
+    #: with ``worker=-1`` the injector expands this process into one
+    #: per worker hosting ``model`` (each with its own timeline, since
+    #: the RNG is seeded per worker); with ``worker >= 0`` it validates
+    #: that the worker actually hosts the model
+    model: Optional[str] = None
 
 
 @dataclass(frozen=True)
@@ -188,14 +194,32 @@ class FaultInjector:
             self.env.process(self._scheduled(), name="faults")
         if self.chaos is not None:
             for p in self.chaos.processes:
-                if not 0 <= p.worker < n:
-                    raise ValueError(f"FaultProcess.worker {p.worker} out "
-                                     f"of range for {n} workers")
-                if p.kind not in PROCESS_KINDS:
-                    raise ValueError(f"unknown FaultProcess.kind "
-                                     f"{p.kind!r}; have {PROCESS_KINDS}")
-                self.env.process(self._stochastic(p),
-                                 name=f"chaos-w{p.worker}-{p.kind}")
+                for q in self._expand(p, n):
+                    if not 0 <= q.worker < n:
+                        raise ValueError(f"FaultProcess.worker {q.worker} "
+                                         f"out of range for {n} workers")
+                    if q.kind not in PROCESS_KINDS:
+                        raise ValueError(f"unknown FaultProcess.kind "
+                                         f"{q.kind!r}; have {PROCESS_KINDS}")
+                    self.env.process(self._stochastic(q),
+                                     name=f"chaos-w{q.worker}-{q.kind}")
+
+    def _expand(self, p: FaultProcess, n: int) -> List[FaultProcess]:
+        """Resolve model-targeted processes (docs/HETEROGENEITY.md) into
+        per-worker ones; worker-targeted processes pass through."""
+        if p.model is None:
+            return [p]
+        hosts = [w.wid for w in self.sim.workers
+                 if getattr(w, "model", None) == p.model]
+        if not hosts:
+            raise ValueError(f"FaultProcess.model {p.model!r} matches no "
+                             f"worker in this fleet")
+        if p.worker >= 0:
+            if p.worker not in hosts:
+                raise ValueError(f"FaultProcess.worker {p.worker} does "
+                                 f"not host model {p.model!r}")
+            return [p]
+        return [replace(p, worker=wid) for wid in hosts]
 
     # ------------------------------------------------------------------
     def _log(self, wid: int, kind: str, factor: float = 1.0) -> None:

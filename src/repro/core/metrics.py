@@ -32,7 +32,15 @@ AVAILABILITY_FIELDS = (
     "n_failures", "mtbf_observed_s", "mttr_observed_s", "target",
     "window_s", "error_budget_s", "budget_consumed_s",
     "budget_remaining_frac", "burn_rate", "request_success_rate",
-    "tenants")
+    "tenants", "models")
+
+#: every key of a ``Results.model_summary()`` row (heterogeneous
+#: multi-model fleets); scripts/check_docs.py asserts each is
+#: documented in docs/HETEROGENEITY.md
+MODEL_SUMMARY_FIELDS = (
+    "n_requests", "n_finished", "tokens", "token_tps",
+    "latency_p50", "latency_p99", "ttft_p50", "ttft_p99",
+    "slo_attainment", "goodput_rps", "preempt_rate", "n_workers")
 
 
 def _interp_percentile(s: Sequence[float], p: float) -> float:
@@ -230,6 +238,10 @@ class StreamingStats:
         self.attrib = {"n": 0, "ttft": {}, "decode": {}, "tpot": {}}
         self._tenant_slos = tenant_slos or {}
         self.tenants: Dict[str, "StreamingStats"] = {}
+        #: per-model sub-sketches (docs/HETEROGENEITY.md), keyed by the
+        #: concrete model name the dispatcher stamped; each inherits the
+        #: global streaming SLO so per-model goodput works in drop mode
+        self.models: Dict[str, "StreamingStats"] = {}
 
     # ------------------------------------------------------------------
     def _tenant(self, tid: str) -> "StreamingStats":
@@ -240,10 +252,19 @@ class StreamingStats:
             self.tenants[tid] = sub
         return sub
 
+    def _model(self, model: str) -> "StreamingStats":
+        sub = self.models.get(model)
+        if sub is None:
+            sub = StreamingStats(self.alpha, slo=self.slo)
+            self.models[model] = sub
+        return sub
+
     def fold(self, req: Request, *, _recurse: bool = True) -> None:
         """Fold one retired request (finished or rejected) and forget it."""
         if _recurse and req.tenant_id is not None:
             self._tenant(req.tenant_id).fold(req, _recurse=False)
+        if _recurse and req.model is not None:
+            self._model(req.model).fold(req, _recurse=False)
         self.n_folded += 1
         self.preempts += req.preempt_count
         self.spec_steps += req.spec_steps
@@ -342,6 +363,12 @@ class Results:
     fault_events: Optional[list] = None
     #: worker count (after replica expansion) for capacity availability
     n_workers: int = 0
+    #: wid -> hosted model name when the sim ran heterogeneous fleets
+    #: (docs/HETEROGENEITY.md); drives per-model availability and
+    #: ``model_summary`` worker counts
+    worker_models: Optional[Dict[int, str]] = None
+    #: the arch requests defaulted to when they arrived unstamped
+    default_model: Optional[str] = None
     #: per-Results caches: finished list and sorted metric lists are
     #: computed once (the repeated-full-sort fix); safe because Results
     #: is read after the simulation has finished mutating requests
@@ -682,6 +709,103 @@ class Results:
             }
         return out
 
+    # ---- heterogeneous multi-model fleets (docs/HETEROGENEITY.md) -----
+    def model_ids(self) -> List[str]:
+        """Every model served or hosted, in sorted order."""
+        out = set()
+        if self.worker_models:
+            out.update(m for m in self.worker_models.values()
+                       if m is not None)
+        if self.stats is not None:
+            out.update(self.stats.models)
+        out.update(r.model for r in self.requests if r.model is not None)
+        return sorted(out)
+
+    def for_model(self, model: str) -> "Results":
+        """A Results view restricted to one model's requests (shares the
+        simulation span, so rates remain comparable across models)."""
+        return Results(
+            requests=[r for r in self.requests if r.model == model],
+            sim_time=self.sim_time,
+            tenant_specs=self.tenant_specs,
+            stats=self.stats.models.get(model)
+            if self.stats is not None else None,
+            worker_models={wid: m for wid, m
+                           in (self.worker_models or {}).items()
+                           if m == model} or None,
+            default_model=self.default_model)
+
+    def model_summary(self, *, ttft_slo: float = 0.0,
+                      mtpot_slo: float = 0.0
+                      ) -> Dict[str, Dict[str, float]]:
+        """Per-model latency/TTFT percentiles, SLO attainment (fraction
+        of *finished* requests meeting the SLO), goodput and hosting
+        worker count — the multi-model mirror of ``tenant_summary``.
+        ``MODEL_SUMMARY_FIELDS`` lists every row key.  In streaming mode
+        SLO columns require the thresholds configured up front
+        (``SimSpec.streaming_slo``), like ``slo_goodput``."""
+        if self.stats is not None:
+            return self._model_summary_streaming(ttft_slo, mtpot_slo)
+        out: Dict[str, Dict[str, float]] = {}
+        f = self.finished
+        span = (max(r.t_finish for r in f)
+                - min(r.arrival_time for r in f)) if f else 0.0
+        hosts = self.worker_models or {}
+        for m in self.model_ids():
+            sub = self.for_model(m)
+            fin = sub.finished
+            n_ok = sum(1 for r in fin if r.meets_slo(ttft_slo, mtpot_slo))
+            lats = sub._sorted("latencies", sub.latencies())
+            tt = sub._sorted("ttfts", sub.ttfts())
+            out[m] = {
+                "n_requests": len(sub.requests),
+                "n_finished": len(fin),
+                "tokens": sum(r.tokens_generated for r in fin),
+                "token_tps": sum(r.tokens_generated for r in fin)
+                / max(span, 1e-9) if fin else 0.0,
+                "latency_p50": _interp_percentile(lats, 50),
+                "latency_p99": _interp_percentile(lats, 99),
+                "ttft_p50": _interp_percentile(tt, 50),
+                "ttft_p99": _interp_percentile(tt, 99),
+                "slo_attainment": n_ok / len(fin) if fin
+                else float("nan"),
+                "goodput_rps": n_ok / max(span, 1e-9) if fin else 0.0,
+                "preempt_rate": sub.preemption_rate(),
+                "n_workers": sum(1 for v in hosts.values() if v == m),
+            }
+        return out
+
+    def _model_summary_streaming(self, ttft_slo: float, mtpot_slo: float
+                                 ) -> Dict[str, Dict[str, float]]:
+        """model_summary from folded per-model sketches (drop mode):
+        same keys, span shared with the aggregate so rates compare."""
+        out: Dict[str, Dict[str, float]] = {}
+        span = self.stats.span
+        hosts = self.worker_models or {}
+        for m in self.model_ids():
+            s = self.stats.models.get(m)
+            if s is None:
+                s = StreamingStats(self.stats.alpha)
+            slo_match = s.slo == (ttft_slo, mtpot_slo) \
+                and s.slo is not None
+            out[m] = {
+                "n_requests": s.n_folded,
+                "n_finished": s.n_finished,
+                "tokens": s.tokens,
+                "token_tps": s.tokens / max(span, 1e-9),
+                "latency_p50": s.latency.percentile(50),
+                "latency_p99": s.latency.percentile(99),
+                "ttft_p50": s.ttft.percentile(50),
+                "ttft_p99": s.ttft.percentile(99),
+                "slo_attainment": s.n_slo_ok / s.n_finished
+                if slo_match and s.n_finished else float("nan"),
+                "goodput_rps": s.n_slo_ok / max(span, 1e-9)
+                if slo_match else float("nan"),
+                "preempt_rate": s.preempts / max(1, s.n_folded),
+                "n_workers": sum(1 for v in hosts.values() if v == m),
+            }
+        return out
+
     # ------------------------------------------------------------------
     def availability_summary(self, *, target: float = 0.995,
                              window: Optional[float] = None) -> dict:
@@ -745,24 +869,28 @@ class Results:
             for wid in range(n)}
         capacity_down = sum(downtime_per_worker.values())
         # service downtime: sweep the interval deltas, accumulate the
-        # spans where every one of the n workers is down at once
-        deltas: List[Tuple[float, int]] = []
-        for ivs in down.values():
-            for a, b in ivs:
-                deltas.append((a, 1))
-                deltas.append((b, -1))
-        deltas.sort()
-        service_down = 0.0
-        cnt = 0
-        t_all: Optional[float] = None
-        for t, d in deltas:
-            was_all = cnt == n
-            cnt += d
-            if not was_all and cnt == n:
-                t_all = t
-            elif was_all and cnt < n and t_all is not None:
-                service_down += t - t_all
-                t_all = None
+        # spans where every one of the nn workers is down at once
+        def _all_down(iv_lists, nn: int) -> float:
+            deltas: List[Tuple[float, int]] = []
+            for ivs in iv_lists:
+                for a, b in ivs:
+                    deltas.append((a, 1))
+                    deltas.append((b, -1))
+            deltas.sort()
+            total = 0.0
+            cnt = 0
+            t_all: Optional[float] = None
+            for t, d in deltas:
+                was_all = cnt == nn
+                cnt += d
+                if not was_all and cnt == nn:
+                    t_all = t
+                elif was_all and cnt < nn and t_all is not None:
+                    total += t - t_all
+                    t_all = None
+            return total
+
+        service_down = _all_down(down.values(), n)
         window_s = window if window is not None else T
         scale = window_s / T
         error_budget_s = (1.0 - target) * window_s
@@ -782,6 +910,23 @@ class Results:
                     if nreq else 1.0,
                     "slo_attainment": row.get("slo_attainment",
                                               float("nan"))}
+        # per-model availability over each model's hosting workers
+        # (docs/HETEROGENEITY.md): a model is serviceable while at least
+        # one of its hosts is up, regardless of the rest of the fleet
+        models: Dict[str, dict] = {}
+        if self.worker_models:
+            for m in sorted(set(self.worker_models.values())):
+                wids = [wid for wid, name in self.worker_models.items()
+                        if name == m]
+                m_down = _all_down([down.get(wid, ()) for wid in wids],
+                                   len(wids))
+                m_cap = sum(downtime_per_worker.get(wid, 0.0)
+                            for wid in wids)
+                models[m] = {
+                    "service_availability": 1.0 - m_down / T,
+                    "capacity_availability":
+                        1.0 - m_cap / (len(wids) * T),
+                    "n_workers": len(wids)}
         return {
             "service_availability": 1.0 - service_down / T,
             "capacity_availability": 1.0 - capacity_down / (n * T),
@@ -808,6 +953,7 @@ class Results:
             if target < 1.0 else float("nan"),
             "request_success_rate": n_fin / n_total if n_total else 1.0,
             "tenants": tenants,
+            "models": models,
         }
 
     def summary(self, *, ttft_slo: float = 0.0,

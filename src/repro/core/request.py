@@ -33,6 +33,12 @@ class Request:
     round_idx: int = 0
     history_len: int = 0                 # tokens of prior rounds (KV reusable)
 
+    # heterogeneous fleet serving (docs/HETEROGENEITY.md): the model this
+    # request must run on.  None means "the simulation's default arch";
+    # the dispatcher stamps the concrete name at arrival so routing and
+    # per-model metrics never see the sentinel
+    model: Optional[str] = None
+
     # multi-tenant QoS (repro.core.tenancy)
     tenant_id: Optional[str] = None
     priority: int = 0                    # tier priority (larger = higher)

@@ -37,6 +37,14 @@ class GlobalScheduler:
         with the dispatch-side record book."""
         return None
 
+    def eligible_for(self, req: Request, workers: List) -> List:
+        """Workers this policy would ever consider for ``req`` — the
+        dispatcher parks a request when none of them is alive.  The
+        default (every worker) keeps model-blind policies exactly as
+        they were; model-aware policies narrow it to the request's
+        hosts (docs/HETEROGENEITY.md)."""
+        return workers
+
     # ---- observability (repro.obs) -----------------------------------
     def observe_assign(self, req: Request, wid: int) -> None:
         """Record one dispatch decision in a per-worker record book the
@@ -221,14 +229,73 @@ class PriorityAging(GlobalScheduler):
         return PriorityAgingDiscipline(self.aging_rate)
 
 
+class ModelRouted(GlobalScheduler):
+    """Model-aware routing for heterogeneous multi-model fleets
+    (docs/HETEROGENEITY.md): restrict dispatch to the workers hosting
+    the request's model, then delegate the choice among them to any
+    inner policy.
+
+    ``inner`` is a policy name (``make_global_scheduler`` spelling) or
+    instance; it sees only the host subset, so the role/drain fallback
+    in ``_eligible`` can never leak a request onto a worker serving a
+    different model.  A worker whose ``model`` attribute is unset hosts
+    everything (homogeneous fleets — where this wrapper is a byte-exact
+    pass-through of its inner policy)."""
+
+    def __init__(self, inner="least_loaded", **inner_kw):
+        if isinstance(inner, str):
+            inner = make_global_scheduler(inner, **inner_kw)
+        elif inner_kw:
+            raise ValueError("inner_kw only applies when inner is a name")
+        self.inner = inner
+
+    @staticmethod
+    def _hosts(req, workers):
+        model = getattr(req, "model", None)
+        if model is None:
+            return workers
+        out = [w for w in workers
+               if getattr(w, "model", None) in (None, model)]
+        if not out:
+            raise ValueError(
+                f"no worker hosts model {model!r} (request {req.id})")
+        return out
+
+    def eligible_for(self, req, workers):
+        return self._hosts(req, workers)
+
+    def assign(self, req, workers):
+        return self.inner.assign(req, self._hosts(req, workers))
+
+    def reassign(self, req, workers):
+        return self.inner.reassign(req, self._hosts(req, workers))
+
+    def discipline(self):
+        return self.inner.discipline()
+
+    def on_service_start(self, req) -> None:
+        hook = getattr(self.inner, "on_service_start", None)
+        if hook is not None:
+            hook(req)
+
+
+def _hetero_routed(**kw):
+    """The ``hetero`` policy upgraded for multi-model fleets: model
+    routing wrapped around the FLOPs/bandwidth-weighted chooser.  For a
+    single-model fleet the wrapper is inert, so existing runs keep
+    their exact dispatch sequence."""
+    return ModelRouted(inner=HeterogeneityAware(**kw))
+
+
 #: every accepted ``SimSpec.global_policy`` name (aliases included);
 #: scripts/check_docs.py asserts each key is documented in docs/POLICIES.md
 GLOBAL_POLICIES = {"round_robin": RoundRobin, "least_loaded": LeastLoaded,
                    "disagg": DisaggPD, "disagg_pd": DisaggPD,
                    "session_affinity": SessionAffinity,
-                   "hetero": HeterogeneityAware,
-                   "heterogeneity_aware": HeterogeneityAware,
-                   "wfq": WeightedFairQueuing, "priority": PriorityAging}
+                   "hetero": _hetero_routed,
+                   "heterogeneity_aware": _hetero_routed,
+                   "wfq": WeightedFairQueuing, "priority": PriorityAging,
+                   "model_routed": ModelRouted}
 
 
 def make_global_scheduler(kind: str, **kw) -> GlobalScheduler:

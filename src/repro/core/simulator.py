@@ -88,6 +88,12 @@ class WorkerSpec:
     mem_cap_override: Optional[float] = None  # bytes (Fig. 13/15 sweeps)
     hw_overrides: Dict[str, float] = field(default_factory=dict)
     slowdown: float = 1.0
+    #: model this worker hosts (docs/HETEROGENEITY.md): a config name or
+    #: ArchConfig; None inherits ``SimSpec.arch``.  The worker's memory
+    #: sizing, cost backend and KV-transfer pricing all resolve against
+    #: this arch, so one fleet can serve several models at once (pair
+    #: with the ``model_routed`` global policy)
+    arch: Optional[Union[str, ArchConfig]] = None
 
 
 def effective_tp(ws: WorkerSpec, parallel: ParallelSpec) -> int:
@@ -191,6 +197,12 @@ class Simulation:
         self.spec = spec
         self.cfg = spec.arch if isinstance(spec.arch, ArchConfig) \
             else get_config(spec.arch)
+        #: concrete name stamped on requests arriving with model=None,
+        #: so routing and per-model metrics never see the sentinel
+        self.default_model: str = self.cfg.name
+        #: model name -> ArchConfig for every arch hosted by the fleet
+        #: (filled by _build_workers; the default arch is always present)
+        self._model_cfgs: Dict[str, ArchConfig] = {self.cfg.name: self.cfg}
         self.env = Environment()
         self.link = comm_mod.Link(self.env, spec.kv_link)
         self.pool = MemoryPool(spec.pool) if spec.pool else None
@@ -227,6 +239,7 @@ class Simulation:
             if spec.tenants else None
         self.workers: List[Worker] = []
         self._build_workers()
+        self._validate_models()
         #: requests held at the dispatcher during a cluster-wide outage
         #: (every worker dead), re-placed on the first recovery; each
         #: entry is (request, source SwapManager or None)
@@ -236,9 +249,13 @@ class Simulation:
             if spec.faults or (spec.chaos is not None
                                and spec.chaos.processes) else None
         self._n_finished = 0
-        self._kv_bytes_per_token = kv_bytes_per_token(
-            self.cfg, spec.dtype_bytes) or state_bytes_per_seq(
-            self.cfg, spec.dtype_bytes)
+        #: model -> (kv_bytes_per_token, state_bytes_per_seq) so the
+        #: migration path prices the KV transfer against the request's
+        #: own arch, not the fleet default
+        self._kv_by_model = {
+            name: (kv_bytes_per_token(cfg, spec.dtype_bytes),
+                   state_bytes_per_seq(cfg, spec.dtype_bytes))
+            for name, cfg in self._model_cfgs.items()}
 
     # ------------------------------------------------------------------
     def _build_workers(self) -> None:
@@ -279,6 +296,16 @@ class Simulation:
             #: config keyed by index (backends_by_worker) follows the
             #: original position, not the expanded one
             base_i = i % len(spec.workers)
+            # per-worker arch (docs/HETEROGENEITY.md): None inherits the
+            # fleet default; everything below — memory sizing, cost
+            # backend, encoder tokens — resolves against this config
+            if ws.arch is None:
+                wcfg = self.cfg
+            elif isinstance(ws.arch, ArchConfig):
+                wcfg = ws.arch
+            else:
+                wcfg = get_config(ws.arch)
+            self._model_cfgs.setdefault(wcfg.name, wcfg)
             hw = HARDWARE[ws.hw]
             if ws.hw_overrides:
                 hw = hw.with_(**ws.hw_overrides)
@@ -288,7 +315,7 @@ class Simulation:
             # is pp device capacities minus one full (tp-sharded) copy of
             # the weights, which the stages hold 1/pp each
             mem_cfg = MemoryConfig.from_model(
-                self.cfg, hw.mem_cap * par.pp, block_size=spec.block_size,
+                wcfg, hw.mem_cap * par.pp, block_size=spec.block_size,
                 dtype_bytes=spec.dtype_bytes, tp=tp,
                 gpu_mem_util=ws.gpu_mem_util,
                 watermark=max(0.0, 1.0 - ws.max_mem_ratio),
@@ -308,13 +335,13 @@ class Simulation:
                 backend = TabularBackend.fit(spec.backend_samples)
             elif par.pp > 1:
                 backend = PipelineBackend.for_model(
-                    self.cfg, hw,
+                    wcfg, hw,
                     ParallelSpec(tp=tp, pp=par.pp,
                                  microbatches=par.microbatches),
                     cluster, dtype_bytes=spec.dtype_bytes)
             else:
                 backend = RooflineBackend.for_model(
-                    self.cfg, hw, tp=tp, dtype_bytes=spec.dtype_bytes,
+                    wcfg, hw, tp=tp, dtype_bytes=spec.dtype_bytes,
                     cluster=cluster)
             sched = make_local_scheduler(
                 spec.local_policy, max_batch=spec.max_batch,
@@ -322,8 +349,8 @@ class Simulation:
                 chunked_prefill=spec.chunked_prefill,
                 prefill_chunk=spec.prefill_chunk)
             hooks = disagg_hooks() if disagg else Hooks()
-            enc_tokens = self.cfg.enc_seq_len \
-                if self.cfg.family in ("audio", "encdec") else 0
+            enc_tokens = wcfg.enc_seq_len \
+                if wcfg.family in ("audio", "encdec") else 0
             draft_backend = None
             if draft_cfg is not None:
                 # draft model runs on the same chip as its worker (with
@@ -341,11 +368,39 @@ class Simulation:
                        discipline=self.global_sched.discipline(),
                        spec_decode=spec.spec_decode,
                        draft_backend=draft_backend, swap=swap,
-                       obs=self.obs)
+                       obs=self.obs, model=wcfg.name, tp=tp)
             w.slowdown = ws.slowdown
             if self.obs is not None:
                 self.obs.install(w)
             self.workers.append(w)
+
+    def _validate_models(self) -> None:
+        """Fail fast on fleet/workload model mismatches: every model the
+        workload declares must be hosted by at least one worker, and a
+        multi-model fleet needs a model-aware global policy (one that
+        overrides ``eligible_for``) — a model-blind policy would happily
+        dispatch a request onto a worker serving a different model."""
+        spec = self.spec
+        hosted = {w.model for w in self.workers}
+        if spec.tenants:
+            wanted = {t.workload.model or self.default_model
+                      for t in spec.tenants}
+        else:
+            wanted = {spec.workload.model or self.default_model}
+        missing = sorted(wanted - hosted)
+        if missing:
+            raise ValueError(
+                f"workload targets model(s) {missing} but the fleet "
+                f"hosts only {sorted(hosted)}; add a WorkerSpec with "
+                f"arch=<model> (docs/HETEROGENEITY.md)")
+        if len(hosted) > 1 and type(self.global_sched).eligible_for \
+                is GlobalScheduler.eligible_for:
+            raise ValueError(
+                f"fleet hosts multiple models {sorted(hosted)} but "
+                f"global_policy={spec.global_policy!r} is model-blind; "
+                f"use 'model_routed' (wrapping it via "
+                f"global_policy_kw={{'inner': {spec.global_policy!r}}}) "
+                f"or 'hetero' (docs/HETEROGENEITY.md)")
 
     # ------------------------------------------------------------------
     # cluster callbacks (used by workers/hooks)
@@ -355,9 +410,8 @@ class Simulation:
         if target_id == from_worker.wid:
             return                          # stays: nothing to move
         req.state = State.MIGRATING
-        nbytes = self._kv_bytes_per_token * max(1, req.context_len) \
-            if kv_bytes_per_token(self.cfg, self.spec.dtype_bytes) else \
-            state_bytes_per_seq(self.cfg, self.spec.dtype_bytes)
+        kvt, sbs = self._kv_by_model[req.model or self.default_model]
+        nbytes = kvt * max(1, req.context_len) if kvt else sbs
         done = self.link.transfer(nbytes)
         target = self.workers[target_id]
         obs = self.obs
@@ -430,7 +484,12 @@ class Simulation:
         request into the new worker's tier (no PCIe transfer — the
         bytes never left host memory), falling back to re-prefill when
         the new tier has no room."""
-        if not any(w.alive for w in self.workers):
+        # park against the policy's eligible subset: a model whose hosts
+        # are all down waits at the dispatcher even while workers of
+        # other models keep serving (model-blind policies see the full
+        # fleet here, exactly as before)
+        hosts = self.global_sched.eligible_for(req, self.workers)
+        if not any(w.alive for w in hosts):
             self._parked.append((req, src_swap))
             return
         wid = self.global_sched.assign(req, self.workers)
@@ -463,7 +522,12 @@ class Simulation:
         retain = self.spec.retain_requests
         obs = self.obs
         it = self.source if streaming else self.requests
+        default_model = self.default_model
         for req in it:
+            if req.model is None:
+                # stamp the concrete default so routing, per-model
+                # metrics and the migration path never see the sentinel
+                req.model = default_model
             if streaming and retain:
                 self.requests.append(req)
             delay = req.arrival_time - env.now
@@ -555,6 +619,8 @@ class Simulation:
             or any(w.pp_span_time for w in self.workers) else None,
             stats=self.stats,
             max_live=self.max_live,
+            worker_models={w.wid: w.model for w in self.workers},
+            default_model=self.default_model,
             fault_events=self.fault_injector.events
             if self.fault_injector is not None else None,
             n_workers=len(self.workers),

@@ -154,12 +154,17 @@ class AdmissionController:
         if obs is not None:
             # gateway span ends here; the request enters a worker queue
             obs.on_release(req, self.env.now)
-            wid = self.cluster.global_sched.assign(req,
-                                                   self.cluster.workers)
+        place = getattr(self.cluster, "_place", None)
+        if place is not None:
+            # the cluster's placement path: same assign/observe/submit
+            # sequence, plus outage parking — a request released while
+            # every eligible worker is down waits at the dispatcher
+            # instead of crashing the scheduler
+            place(req)
+            return
+        wid = self.cluster.global_sched.assign(req, self.cluster.workers)
+        if obs is not None:
             self.cluster.global_sched.observe_assign(req, wid)
-        else:
-            wid = self.cluster.global_sched.assign(req,
-                                                   self.cluster.workers)
         self.cluster.workers[wid].submit(req)
 
     def _wakeup(self, tid: str) -> None:

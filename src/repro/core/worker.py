@@ -48,10 +48,17 @@ class Worker:
                  discipline=None, spec_decode=None,
                  draft_backend: Optional[CostBackend] = None,
                  swap: Optional[SwapManager] = None,
-                 obs=None):
+                 obs=None, model: Optional[str] = None, tp: int = 1):
         self.env = env
         self.wid = wid
         self.hw = hw
+        #: model this worker hosts (docs/HETEROGENEITY.md); None = hosts
+        #: anything (homogeneous fleets and bare unit-test workers)
+        self.model = model
+        #: resolved tensor-parallel degree (per-worker override wins
+        #: over the cluster ParallelSpec) — mirrored here so the price
+        #: model can be pinned against the built fleet
+        self.tp = tp
         self.backend = backend
         self.mem = BlockManager(mem_cfg)
         self.sched = sched
@@ -77,6 +84,10 @@ class Worker:
 
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []
+        #: every distinct request model ever submitted here — the
+        #: no-cross-model-dispatch invariant in tests/test_hetero_fleet.py
+        #: asserts this stays within {self.model}
+        self.served_models: set = set()
         self.alive = True
         self.slowdown = 1.0
         #: draining (repro.core.faults): alive and finishing its queue,
@@ -132,6 +143,8 @@ class Worker:
     def submit(self, req: Request) -> None:
         req.worker_id = self.wid
         req.state = State.WAITING
+        if req.model is not None:
+            self.served_models.add(req.model)
         self._enqueue(req)
         self._wakeup()
 
@@ -140,6 +153,8 @@ class Worker:
         for the full context are allocated at admission; no prefill."""
         req.worker_id = self.wid
         req.state = State.WAITING
+        if req.model is not None:
+            self.served_models.add(req.model)
         req.prefill_done_len = req.prefill_target
         self._enqueue(req)
         self._wakeup()

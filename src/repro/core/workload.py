@@ -50,6 +50,14 @@ class WorkloadSpec:
     qps: float = 4.0                     # mean arrival rate; 0 => all at t=0
     seed: int = 0
 
+    #: model this traffic targets (docs/HETEROGENEITY.md): stamped on
+    #: every generated request so a model-aware global policy only
+    #: dispatches it to workers hosting that model.  None = the
+    #: simulation's default arch.  Multi-model mixes merge per-model
+    #: workloads through the tenant-source machinery
+    #: (``make_tenant_source``), each tenant carrying its own ``model``
+    model: Optional[str] = None
+
     # arrival process: "poisson" | "bursty" | "diurnal" | "trace"
     arrival: str = "poisson"
     # bursty (MMPP on-off): exponential phase durations; the arrival rate
@@ -236,7 +244,8 @@ class SyntheticSource(RequestSource):
                     output_len=o, session_id=sid, round_idx=r,
                     history_len=history, prefix_id=prefix_id,
                     prefix_len=spec.shared_prefix_len
-                    if prefix_id is not None else 0)))
+                    if prefix_id is not None else 0,
+                    model=spec.model)))
                 rid += 1
                 n_emitted += 1
                 history += p + o
@@ -249,10 +258,12 @@ class SyntheticSource(RequestSource):
             yield req
 
 
-def _parse_trace_record(i: int, rec: dict) -> Request:
+def _parse_trace_record(i: int, rec: dict,
+                        model: Optional[str] = None) -> Request:
     """One JSONL trace line -> Request (the ``save_trace`` field set);
     shared by streaming replay and the materializing ``generate()`` so
-    the two modes cannot drift on trace semantics."""
+    the two modes cannot drift on trace semantics.  A per-record
+    ``model`` field wins over the workload-level default."""
     return Request(
         id=i, arrival_time=float(rec.get("arrival", 0.0)),
         prompt_len=int(rec["prompt_len"]),
@@ -260,7 +271,8 @@ def _parse_trace_record(i: int, rec: dict) -> Request:
         session_id=rec.get("session_id"),
         round_idx=int(rec.get("round", 0)),
         prefix_id=rec.get("prefix_id"),
-        prefix_len=int(rec.get("prefix_len", 0)))
+        prefix_len=int(rec.get("prefix_len", 0)),
+        model=rec.get("model", model))
 
 
 class TraceSource(RequestSource):
@@ -281,7 +293,7 @@ class TraceSource(RequestSource):
             for i, line in enumerate(f):
                 if i >= spec.num_requests:
                     break
-                req = _parse_trace_record(i, json.loads(line))
+                req = _parse_trace_record(i, json.loads(line), spec.model)
                 if req.arrival_time < last:
                     raise ValueError(
                         f"{spec.trace_path}:{i + 1}: arrivals not sorted "
@@ -376,7 +388,8 @@ def generate(spec: WorkloadSpec) -> List[Request]:
             for i, line in enumerate(f):
                 if i >= spec.num_requests:
                     break
-                reqs.append(_parse_trace_record(i, json.loads(line)))
+                reqs.append(_parse_trace_record(i, json.loads(line),
+                                                spec.model))
         reqs.sort(key=lambda r: (r.arrival_time, r.id))
         return reqs
     return list(SyntheticSource(spec))
@@ -398,4 +411,8 @@ def save_trace(reqs: List[Request], path: str) -> None:
                 # workloads keep the seed trace format byte-identical
                 rec["prefix_id"] = r.prefix_id
                 rec["prefix_len"] = r.prefix_len
+            if r.model is not None:
+                # model tags round-trip (docs/HETEROGENEITY.md); plain
+                # workloads keep the seed trace format byte-identical
+                rec["model"] = r.model
             f.write(json.dumps(rec) + "\n")

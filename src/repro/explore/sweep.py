@@ -85,20 +85,24 @@ def point_key(point: Dict, version: str = "") -> str:
     return hashlib.sha1(canon.encode()).hexdigest()[:16]
 
 
+def worker_price(ws, parallel) -> float:
+    """A100-relative price of one worker's devices: its chip price
+    (with ``hw_overrides`` applied, matching what the simulator builds)
+    times the tp x pp devices it spans.  The tp resolution is the
+    simulator's own ``effective_tp``, so the priced worker is the
+    simulated one (pinned by tests/test_hetero_fleet.py)."""
+    hw = HARDWARE[ws.hw]
+    if ws.hw_overrides:
+        hw = hw.with_(**ws.hw_overrides)
+    return hw.price * effective_tp(ws, parallel) * parallel.pp
+
+
 def spec_price(spec: SimSpec) -> float:
-    """A100-relative price of the cluster a spec occupies: each worker's
-    chip price (with its ``hw_overrides`` applied, matching what the
-    simulator builds) times the tp x pp devices it spans, times
-    replicas.  The tp resolution is the simulator's own
-    ``effective_tp``, so the priced cluster is the simulated one."""
+    """A100-relative price of the cluster a spec occupies: the sum of
+    per-worker ``worker_price`` over the worker list, times replicas."""
     par = spec.parallel
-    total = 0.0
-    for ws in spec.workers:
-        hw = HARDWARE[ws.hw]
-        if ws.hw_overrides:
-            hw = hw.with_(**ws.hw_overrides)
-        total += hw.price * effective_tp(ws, par) * par.pp
-    return total * par.replicas
+    return sum(worker_price(ws, par) for ws in spec.workers) \
+        * par.replicas
 
 
 def default_metrics(spec: SimSpec, res: Results) -> Dict:

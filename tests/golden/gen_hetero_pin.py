@@ -1,0 +1,74 @@
+"""Regenerate the golden backward-compat pin for the heterogeneity
+refactor (tests/test_hetero_fleet.py::test_golden_single_model_pin).
+
+The pin freezes a single-model, pre-refactor ``SimSpec`` run — request
+timestamps, token times, mem/swap stats and the fault log — as JSON.
+Any ``WorkerSpec``/worker-construction refactor that changes this run's
+bytes is a backward-compat break.  Regenerate ONLY when an intentional
+cost-model change invalidates the pin:
+
+    PYTHONPATH=src python tests/golden/gen_hetero_pin.py
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.faults import ChaosSpec, FaultSpec
+from repro.core.simulator import SimSpec, WorkerSpec, simulate
+from repro.core.workload import WorkloadSpec
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+PIN_PATH = os.path.join(HERE, "hetero_pin.json")
+
+
+def pinned_spec() -> SimSpec:
+    """The frozen run: two workers, swap preemption, prefix sharing,
+    one scheduled fault with costly recovery — every pre-hetero
+    subsystem the worker-construction refactor touches."""
+    return SimSpec(
+        arch="llama2-7b",
+        workers=[WorkerSpec(hw="A100", gpu_mem_util=0.25),
+                 WorkerSpec(hw="V100", gpu_mem_util=0.5, tp=2)],
+        workload=WorkloadSpec(num_requests=120, qps=10.0, seed=7,
+                              shared_prefix_len=64,
+                              shared_prefix_groups=2),
+        preemption_mode="swap",
+        prefix_sharing=True,
+        faults=[FaultSpec(time=3.0, worker=0, kind="fail", duration=1.0)],
+        chaos=ChaosSpec(reload_time=0.5, warmup_iters=1,
+                        warmup_factor=2.0))
+
+
+def snapshot(res) -> dict:
+    """Byte-exact observable surface of a run: floats round-trip via
+    repr in JSON, so equality on the loaded dict is byte equality."""
+    return {
+        "sim_time": res.sim_time,
+        "requests": [
+            {"id": r.id, "t_first_token": r.t_first_token,
+             "t_finish": r.t_finish, "token_times": r.token_times,
+             "preempt_count": r.preempt_count,
+             "swap_out_count": r.swap_out_count,
+             "swap_in_count": r.swap_in_count,
+             "shared_tokens": r.shared_tokens}
+            for r in sorted(res.requests, key=lambda q: q.id)],
+        "mem_stats": {str(k): v for k, v in (res.mem_stats or {}).items()},
+        "swap_stats": {str(k): v for k, v in (res.swap_stats or {}).items()},
+        "fault_events": [
+            {"time": e.time, "worker": e.worker, "kind": e.kind,
+             "factor": e.factor}
+            for e in (res.fault_events or [])],
+    }
+
+
+def main() -> None:
+    res = simulate(pinned_spec())
+    with open(PIN_PATH, "w") as f:
+        json.dump(snapshot(res), f, indent=1, sort_keys=True)
+    print(f"wrote {PIN_PATH}: {len(res.requests)} requests, "
+          f"sim_time={res.sim_time}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,360 @@
+"""Heterogeneous multi-model fleet serving (docs/HETEROGENEITY.md):
+property-based cross-feature matrix — randomized per-worker (arch, hw,
+role, tp) fleets x {recompute, swap} x {exact, streaming} x {faults
+on/off} — plus the golden single-model backward-compat pin, the
+spec_price/worker-builder agreement regression, model-aware routing
+semantics, and per-model Results breakdowns."""
+import json
+import os
+
+import pytest
+
+from repro.core.costmodel.hardware import ParallelSpec
+from repro.core.faults import ChaosSpec, FaultProcess, FaultSpec
+from repro.core.metrics import MODEL_SUMMARY_FIELDS
+from repro.core.sched.global_sched import (GLOBAL_POLICIES, LeastLoaded,
+                                           ModelRouted,
+                                           make_global_scheduler)
+from repro.core.simulator import (SimSpec, Simulation, WorkerSpec,
+                                  effective_tp, simulate)
+from repro.core.tenancy import TenantSpec
+from repro.core.tenancy.spec import TenantTier
+from repro.core.workload import WorkloadSpec, generate, save_trace
+from repro.explore.sweep import spec_price, worker_price
+from repro.obs import ObsSpec
+
+from _hypothesis_compat import given, settings, st
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden", "hetero_pin.json")
+
+BIG, SMALL = "llama2-7b", "qwen2-0.5b"
+
+
+# ---------------------------------------------------------------------------
+# helpers (shared idiom with tests/test_chaos.py)
+# ---------------------------------------------------------------------------
+def _sig(res):
+    """Byte-level signature of a run: per-request ids and timestamps."""
+    return [(r.id, r.t_first_token, r.t_finish, tuple(r.token_times))
+            for r in sorted(res.requests, key=lambda r: r.id)]
+
+
+def _assert_exactly_once(res, n_expected):
+    fin = [r for r in res.requests if r.t_finish is not None]
+    assert len(fin) == n_expected, \
+        f"lost requests: {n_expected - len(fin)}"
+    ids = [r.id for r in res.requests]
+    assert len(ids) == len(set(ids)), "duplicated request objects"
+    for r in fin:
+        assert r.tokens_generated == r.output_len, r.id
+        assert len(r.token_times) == r.output_len, r.id
+        assert all(b >= a for a, b in zip(r.token_times,
+                                          r.token_times[1:])), r.id
+
+
+def _assert_attribution_conserved(res, tol=1e-6):
+    for r in res.requests:
+        if r.t_finish is None or r.obs is None or r.obs.final is None:
+            continue
+        f = r.obs.final
+        ttft = r.t_first_token - r.arrival_time
+        assert abs(sum(f["ttft"].values()) - ttft) < tol, r.id
+        dec = r.t_finish - r.t_first_token
+        assert abs(sum(f["decode"].values()) - dec) < tol, r.id
+
+
+def _assert_no_cross_model_dispatch(sim):
+    """Every worker only ever saw requests for the model it hosts."""
+    for w in sim.workers:
+        assert w.served_models <= {w.model}, \
+            f"worker {w.wid} ({w.model}) served {w.served_models}"
+
+
+def _two_model_tenants(n_each, *, seed):
+    return [
+        TenantSpec(tenant_id="big", tier=TenantTier(),
+                   workload=WorkloadSpec(num_requests=n_each, qps=10.0,
+                                         seed=seed, model=BIG)),
+        TenantSpec(tenant_id="small", tier=TenantTier(),
+                   workload=WorkloadSpec(num_requests=n_each, qps=10.0,
+                                         seed=seed + 1, model=SMALL)),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# property suite: random fleets x preemption x arrival mode x faults
+# ---------------------------------------------------------------------------
+#: extra workers beyond the two per-model "both" anchors: (model index,
+#: hardware index, role, tp) — roles exercise disagg routing inside a
+#: model's host subset, tp the per-worker override.  Hardware and
+#: memory budget are resolved per model by ``_ws`` so every drawn
+#: worker can actually fit its model's weights (a worker whose budget
+#: cannot hold the weights admits nothing and stalls its requests —
+#: true for homogeneous fleets too, not what this suite probes)
+_EXTRA = st.lists(
+    st.tuples(st.integers(0, 1),
+              st.integers(0, 2),
+              st.sampled_from(["both", "prefill", "decode"]),
+              st.integers(1, 2)),
+    max_size=2)
+
+#: per-model feasible (hardware, gpu_mem_util) pools: the 7B model
+#: needs headroom for ~13.5 GB of fp16 weights, the 0.5B one fits
+#: anywhere (utils kept low for preemption pressure)
+_POOLS = {BIG: [("A100", 0.2), ("V100", 0.5), ("A100", 0.35)],
+          SMALL: [("L4", 0.12), ("V100", 0.12), ("A100", 0.1)]}
+
+
+def _ws(model, hw_i, role="both", tp=1):
+    hw, util = _POOLS[model][hw_i]
+    return WorkerSpec(hw=hw, arch=model, role=role, tp=tp,
+                      gpu_mem_util=util)
+
+
+def _fleet_spec(extra, mode, streaming, faulty):
+    models = (BIG, SMALL)
+    workers = [_ws(BIG, 0), _ws(SMALL, 0)]
+    for mi, hw_i, role, tp in extra:
+        workers.append(_ws(models[mi], hw_i, role, tp))
+    faults = [FaultSpec(time=2.0, worker=0, kind="fail", duration=1.0),
+              FaultSpec(time=3.0, worker=1, kind="degrade", factor=3.0,
+                        duration=1.0)] if faulty else []
+    return SimSpec(
+        arch=BIG,
+        workers=workers,
+        global_policy="model_routed",
+        tenants=_two_model_tenants(30, seed=11),
+        preemption_mode=mode,
+        streaming=streaming,
+        faults=faults,
+        chaos=ChaosSpec(reload_time=0.5, warmup_iters=1,
+                        warmup_factor=2.0) if faulty else None,
+        obs=ObsSpec(attribution=True))
+
+
+@settings(max_examples=10)
+@given(extra=_EXTRA,
+       mode=st.sampled_from(["recompute", "swap"]),
+       streaming=st.sampled_from([False, True]),
+       faulty=st.sampled_from([False, True]))
+def test_hetero_fleet_invariants(extra, mode, streaming, faulty):
+    """Under any random heterogeneous fleet, either preemption mode,
+    either arrival mode, with or without faults: every request finishes
+    exactly once, no worker ever receives a request for a model it does
+    not host, latency attribution still sums to the measured spans, and
+    the same seed reproduces the run byte-for-byte."""
+    sim = Simulation(_fleet_spec(extra, mode, streaming, faulty))
+    r1 = sim.run()
+    _assert_exactly_once(r1, 60)
+    _assert_no_cross_model_dispatch(sim)
+    _assert_attribution_conserved(r1)
+    assert set(r1.model_ids()) >= {BIG, SMALL}
+    r2 = simulate(_fleet_spec(extra, mode, streaming, faulty))
+    assert _sig(r1) == _sig(r2)
+    assert (r1.fault_events or []) == (r2.fault_events or [])
+
+
+# ---------------------------------------------------------------------------
+# golden backward-compat pin: the worker-construction refactor must not
+# move a single byte of a pre-hetero single-model run
+# ---------------------------------------------------------------------------
+def test_golden_single_model_pin():
+    import sys
+    sys.path.insert(0, os.path.dirname(GOLDEN))
+    try:
+        from gen_hetero_pin import pinned_spec, snapshot
+    finally:
+        sys.path.pop(0)
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    got = json.loads(json.dumps(snapshot(simulate(pinned_spec()))))
+    assert got == want, \
+        "single-model run diverged from the pre-refactor golden pin"
+
+
+# ---------------------------------------------------------------------------
+# spec_price agreement with the worker builder
+# ---------------------------------------------------------------------------
+def test_spec_price_matches_built_fleet():
+    """The price model and the worker builder resolve tp through the
+    same ``effective_tp``: pricing the *built* fleet device-by-device
+    must equal ``spec_price`` of the spec."""
+    spec = SimSpec(
+        workers=[WorkerSpec(hw="A100", tp=2),
+                 WorkerSpec(hw="L4", arch=SMALL),
+                 WorkerSpec(hw="V100", hw_overrides={"price": 0.3})],
+        global_policy="model_routed",
+        parallel=ParallelSpec(tp=2, replicas=2),
+        workload=WorkloadSpec(num_requests=1, qps=1.0, seed=0))
+    sim = Simulation(spec)
+    pp = spec.parallel.pp
+    built = sum(w.hw.price * w.tp * pp for w in sim.workers)
+    assert built == pytest.approx(spec_price(spec))
+    # and per-worker: builder tp == price-model tp, price matches
+    for i, w in enumerate(sim.workers):
+        ws = spec.workers[i % len(spec.workers)]
+        assert w.tp == effective_tp(ws, spec.parallel)
+        assert worker_price(ws, spec.parallel) == \
+            pytest.approx(w.hw.price * w.tp * pp)
+
+
+# ---------------------------------------------------------------------------
+# routing semantics
+# ---------------------------------------------------------------------------
+def test_model_routed_registry_and_hetero_alias():
+    assert "model_routed" in GLOBAL_POLICIES
+    sched = make_global_scheduler("model_routed")
+    assert isinstance(sched, ModelRouted)
+    assert isinstance(sched.inner, LeastLoaded)
+    for alias in ("hetero", "heterogeneity_aware"):
+        s = make_global_scheduler(alias)
+        assert isinstance(s, ModelRouted), \
+            f"{alias} must be upgraded to model routing"
+    with pytest.raises(ValueError):
+        ModelRouted(inner=LeastLoaded(), aging_rate=1.0)
+
+
+def test_model_routed_passthrough_byte_identical():
+    """On a single-model fleet the wrapper must be inert: same dispatch
+    sequence, same bytes, as its inner policy run bare."""
+    base = dict(workers=[WorkerSpec(), WorkerSpec()],
+                workload=WorkloadSpec(num_requests=80, qps=12.0, seed=5))
+    bare = simulate(SimSpec(**base, global_policy="least_loaded"))
+    wrapped = simulate(SimSpec(**base, global_policy="model_routed"))
+    assert _sig(bare) == _sig(wrapped)
+    assert bare.sim_time == wrapped.sim_time
+
+
+def test_multi_model_fleet_rejects_model_blind_policy():
+    spec = SimSpec(workers=[WorkerSpec(arch=BIG),
+                            WorkerSpec(hw="L4", arch=SMALL)],
+                   global_policy="least_loaded",
+                   tenants=_two_model_tenants(5, seed=1))
+    with pytest.raises(ValueError, match="model-blind"):
+        Simulation(spec)
+
+
+def test_workload_model_must_be_hosted():
+    spec = SimSpec(workers=[WorkerSpec(arch=BIG)],
+                   global_policy="model_routed",
+                   workload=WorkloadSpec(num_requests=5, qps=5.0, seed=0,
+                                         model=SMALL))
+    with pytest.raises(ValueError, match="hosts only"):
+        Simulation(spec)
+
+
+def test_disagg_roles_respected_within_model_subset():
+    """Prefill/decode split inside one model's host subset: requests
+    migrate between that model's workers only, roles honored."""
+    sim = Simulation(SimSpec(
+        arch=BIG,
+        workers=[WorkerSpec(arch=BIG, role="prefill"),
+                 WorkerSpec(arch=BIG, role="decode"),
+                 WorkerSpec(hw="L4", arch=SMALL)],
+        global_policy="model_routed",
+        tenants=_two_model_tenants(20, seed=3)))
+    r = sim.run()
+    _assert_exactly_once(r, 40)
+    _assert_no_cross_model_dispatch(sim)
+    # the decode worker of the BIG subset actually decoded
+    assert sim.workers[1].tokens_emitted > 0
+
+
+# ---------------------------------------------------------------------------
+# per-model Results breakdowns
+# ---------------------------------------------------------------------------
+def _hetero_run(**kw):
+    spec = SimSpec(arch=BIG,
+                   workers=[WorkerSpec(arch=BIG, gpu_mem_util=0.3),
+                            WorkerSpec(hw="L4", arch=SMALL,
+                                       gpu_mem_util=0.3)],
+                   global_policy="model_routed",
+                   tenants=_two_model_tenants(30, seed=7), **kw)
+    return simulate(spec)
+
+
+def test_model_summary_fields_and_conservation():
+    r = _hetero_run()
+    ms = r.model_summary()
+    assert sorted(ms) == sorted([BIG, SMALL])
+    for row in ms.values():
+        assert set(row) == set(MODEL_SUMMARY_FIELDS)
+    # per-model counters sum to the aggregate
+    assert sum(row["n_finished"] for row in ms.values()) == \
+        len(r.finished)
+    assert sum(row["tokens"] for row in ms.values()) == \
+        sum(q.tokens_generated for q in r.finished)
+    assert all(row["n_workers"] == 1 for row in ms.values())
+    assert r.default_model == BIG
+    assert sorted(set(r.worker_models.values())) == [BIG, SMALL]
+
+
+def test_model_summary_streaming_matches_exact_counts():
+    exact = _hetero_run()
+    stream = _hetero_run(retain_requests=False,
+                         streaming_slo=(0.5, 0.1))
+    me, ms = exact.model_summary(), stream.model_summary(
+        ttft_slo=0.5, mtpot_slo=0.1)
+    assert sorted(me) == sorted(ms)
+    for m in me:
+        assert set(ms[m]) == set(MODEL_SUMMARY_FIELDS)
+        assert ms[m]["n_finished"] == me[m]["n_finished"]
+        assert ms[m]["tokens"] == me[m]["tokens"]
+        # sketch quantiles track the exact ones within a few percent
+        assert ms[m]["latency_p50"] == pytest.approx(
+            me[m]["latency_p50"], rel=0.05)
+        assert 0.0 <= ms[m]["slo_attainment"] <= 1.0
+
+
+def test_model_targeted_fault_process_and_availability():
+    """FaultProcess(worker=-1, model=...) expands to every hosting
+    worker; per-model availability only dips for the targeted model."""
+    spec = SimSpec(
+        arch=BIG,
+        workers=[WorkerSpec(arch=BIG, gpu_mem_util=0.3),
+                 WorkerSpec(hw="L4", arch=SMALL, gpu_mem_util=0.3),
+                 WorkerSpec(hw="L4", arch=SMALL, gpu_mem_util=0.3)],
+        global_policy="model_routed",
+        tenants=_two_model_tenants(40, seed=5),
+        chaos=ChaosSpec(
+            processes=(FaultProcess(worker=-1, model=SMALL, mtbf=4.0,
+                                    mttr=0.5, seed=3, max_events=2),),
+            reload_time=0.5))
+    sim = Simulation(spec)
+    r = sim.run()
+    _assert_exactly_once(r, 80)
+    _assert_no_cross_model_dispatch(sim)
+    small_wids = {w.wid for w in sim.workers if w.model == SMALL}
+    assert {e.worker for e in r.fault_events} <= small_wids
+    av = r.availability_summary()["models"]
+    assert av[BIG]["capacity_availability"] == 1.0
+    assert av[SMALL]["capacity_availability"] < 1.0
+    assert av[SMALL]["n_workers"] == 2
+    # a model-targeted process naming an unhosted model fails fast
+    bad = SimSpec(
+        workers=[WorkerSpec()],
+        workload=WorkloadSpec(num_requests=2, qps=5.0, seed=0),
+        chaos=ChaosSpec(processes=(
+            FaultProcess(worker=-1, model="nope", mtbf=5.0),)))
+    with pytest.raises(ValueError, match="matches no"):
+        simulate(bad)
+
+
+def test_trace_round_trips_model(tmp_path):
+    """save_trace keeps per-request model tags; replaying the trace
+    reproduces them (and untagged traces stay tag-free)."""
+    reqs = generate(WorkloadSpec(num_requests=10, qps=5.0, seed=2,
+                                 model=SMALL))
+    assert all(q.model == SMALL for q in reqs)
+    p = tmp_path / "trace.jsonl"
+    save_trace(reqs, str(p))
+    back = generate(WorkloadSpec(lengths="trace", arrival="trace",
+                                 trace_path=str(p)))
+    assert [q.model for q in back] == [SMALL] * 10
+    plain = generate(WorkloadSpec(num_requests=3, qps=5.0, seed=2))
+    assert all(q.model is None for q in plain)
+    p2 = tmp_path / "plain.jsonl"
+    save_trace(plain, str(p2))
+    with open(p2) as f:
+        assert all("model" not in json.loads(line) for line in f)

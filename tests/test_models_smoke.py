@@ -22,6 +22,7 @@ def make_batch(cfg, key, b=2, s=32):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ALL_ARCHS)
 def test_forward_and_train_step(name):
     cfg = get_smoke_config(name)

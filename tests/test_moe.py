@@ -7,6 +7,7 @@ import pytest
 from repro.models.moe import moe_init, moe_apply
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("e,k", [(4, 2), (8, 2), (5, 3)])
 def test_dense_vs_sort(e, k):
     key = jax.random.key(0)
@@ -23,6 +24,7 @@ def test_dense_vs_sort(e, k):
                                rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_padded_experts_get_no_traffic():
     """Experts >= n_experts_logical must receive zero routing weight."""
     key = jax.random.key(2)
@@ -45,6 +47,7 @@ def test_padded_experts_get_no_traffic():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_grad_flows_both_impls():
     key = jax.random.key(4)
     p = moe_init(key, 16, 4, 8, "silu", jnp.float32)

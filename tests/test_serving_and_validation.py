@@ -106,6 +106,7 @@ def sim_with_tabular(reqs_spec, samples, *, num_blocks, block_size,
     return sim.run()
 
 
+@pytest.mark.slow
 def test_structural_validation_batch_traces_match(small_engine):
     """With the same scheduler, memory geometry and workload, the DES
     simulator reproduces the engine's iteration-by-iteration batch

@@ -106,6 +106,7 @@ print("SMALL-MESH-OK", loss)
 """
 
 
+@pytest.mark.slow
 def test_small_mesh_train_step_subprocess():
     """8 host devices, (4 data x 2 model) mesh: the sharded train step
     compiles, runs, and matches the unsharded loss."""

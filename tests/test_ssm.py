@@ -64,6 +64,7 @@ def test_conv_step_matches_full():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_block_prefill_then_decode_matches_forward():
     cfg = SSMConfig(d_state=16, head_dim=8, expand=2, conv_width=4,
                     chunk_size=16, n_groups=1)

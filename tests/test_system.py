@@ -13,6 +13,7 @@ from repro.models import model_zoo as zoo
 from repro.serving.engine import EngineConfig, ServingEngine
 
 
+@pytest.mark.slow
 def test_sim_predicts_engine_iteration_count():
     """Continuous batching iteration count is a structural property: the
     simulator and the real engine must agree exactly (same scheduler)."""

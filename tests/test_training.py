@@ -86,6 +86,7 @@ def test_checkpoint_atomicity_tmp_ignored(smoke_model):
         assert tr2.step == 5
 
 
+@pytest.mark.slow
 def test_run_with_restarts(smoke_model):
     """Supervisor resumes from checkpoints through injected failures."""
     with tempfile.TemporaryDirectory() as d:
