@@ -28,7 +28,8 @@ NON_BENCHMARKS = {"common", "run", "finalize_docs", "roofline_report",
 #: benchmarks scripts/ci.sh runs as `--smoke` CI gates; each must expose
 #: main(argv) handling "--smoke"
 SMOKE_GATED = {"sim_speed", "kv_hierarchy", "parallelism",
-               "observability", "chaos_sweep", "hetero_fleet"}
+               "observability", "chaos_sweep", "hetero_fleet",
+               "autoscale"}
 
 
 def discover_modules() -> set:
@@ -80,12 +81,13 @@ def main(argv=None):
     args = ap.parse_args(argv)
     q = args.quick
 
-    from benchmarks import (batching, chaos_sweep, disagg_ratio,
-                            disagg_validation, hardware_sub,
-                            hetero_fleet, kv_hierarchy, mem_footprint,
-                            memcache, memratio, observability,
-                            parallelism, platform_sweep, sim_speed,
-                            spec_decode, tenant_qos, validation)
+    from benchmarks import (autoscale, batching, chaos_sweep,
+                            disagg_ratio, disagg_validation,
+                            hardware_sub, hetero_fleet, kv_hierarchy,
+                            mem_footprint, memcache, memratio,
+                            observability, parallelism, platform_sweep,
+                            sim_speed, spec_decode, tenant_qos,
+                            validation)
 
     benches = [
         ("validation", lambda: validation.run(n_req=20 if q else 40)),
@@ -109,6 +111,7 @@ def main(argv=None):
         ("observability", lambda: observability.run(quick=q)),
         ("chaos_sweep", lambda: chaos_sweep.run(quick=q)),
         ("hetero_fleet", lambda: hetero_fleet.run(quick=q)),
+        ("autoscale", lambda: autoscale.run(quick=q)),
     ]
     errors = check_registry({name for name, _ in benches})
     for e in errors:

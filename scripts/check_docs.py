@@ -30,7 +30,12 @@ Checks:
   8. the ``model_routed`` policy and every
      ``Results.model_summary()`` key (``MODEL_SUMMARY_FIELDS``)
      appears as a code-span in docs/HETEROGENEITY.md — new
-     multi-model surface without docs fails CI.
+     multi-model surface without docs fails CI,
+  9. every autoscaling policy (``AUTOSCALE_POLICIES``), scale action
+     (``SCALE_ACTIONS``) and ``Results.scaling_summary()`` field
+     (``SCALING_SUMMARY_FIELDS``) appears as a code-span in
+     docs/AUTOSCALING.md — new autoscaler surface without docs
+     fails CI.
 
 Run:  python scripts/check_docs.py        (exits non-zero on failure)
 """
@@ -254,6 +259,30 @@ def check_heterogeneity_docs() -> list:
     return errors
 
 
+def check_autoscaling_docs() -> list:
+    """Every autoscaling policy, scale action and scaling-summary
+    field must be documented as a `code span` in docs/AUTOSCALING.md."""
+    from repro.core.autoscale import AUTOSCALE_POLICIES, SCALE_ACTIONS
+    from repro.core.metrics import SCALING_SUMMARY_FIELDS
+
+    errors = []
+    path = os.path.join(ROOT, "docs", "AUTOSCALING.md")
+    if not os.path.exists(path):
+        return ["docs/AUTOSCALING.md: missing (autoscaling doc "
+                "coverage needs it)"]
+    with open(path) as f:
+        text = f.read()
+    groups = [("autoscaling policy", AUTOSCALE_POLICIES),
+              ("scale action", SCALE_ACTIONS),
+              ("scaling_summary field", SCALING_SUMMARY_FIELDS)]
+    for what, names in groups:
+        for n in names:
+            if f"`{n}`" not in text and f'`"{n}"`' not in text:
+                errors.append(f"{what} `{n}` not documented in "
+                              f"docs/AUTOSCALING.md")
+    return errors
+
+
 def main() -> int:
     errors = []
     docs = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
@@ -269,6 +298,7 @@ def main() -> int:
     errors.extend(check_observability_docs())
     errors.extend(check_reliability_docs())
     errors.extend(check_heterogeneity_docs())
+    errors.extend(check_autoscaling_docs())
     for e in errors:
         print(f"docs-check FAIL: {e}")
     if not errors:
@@ -276,8 +306,8 @@ def main() -> int:
         print(f"docs-check OK: {n} markdown files, links + anchors resolve, "
               f"all benchmarks/examples have module docstrings, all "
               f"policies/workload kinds and memory/parallelism/"
-              f"observability/reliability/heterogeneity registries "
-              f"documented")
+              f"observability/reliability/heterogeneity/autoscaling "
+              f"registries documented")
     return 1 if errors else 0
 
 

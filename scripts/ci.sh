@@ -109,6 +109,14 @@ stage "smoke: hetero fleet economics + routing gates" \
     env PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     timeout 120 python benchmarks/hetero_fleet.py --smoke
 
+# autoscaling gates (docs/AUTOSCALING.md): the closed-loop controller
+# adds capacity under a diurnal burst, scale-down drains retire
+# without losing a request, and a disabled autoscaler is byte-inert
+# (identical timelines to a spec with no autoscaler at all)
+stage "smoke: autoscale burst + drain + inertness gates" \
+    env PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    timeout 300 python benchmarks/autoscale.py --smoke
+
 # observability gates (docs/OBSERVABILITY.md): exported Chrome trace
 # validates (spans nest, durations sum to latency within 1e-6),
 # attribution conserves in exact and streaming drop-mode, time series

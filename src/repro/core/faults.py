@@ -257,6 +257,8 @@ class FaultInjector:
         self._log(w.wid, "drain")
 
     def _undrain(self, w) -> None:
+        if getattr(w, "retiring", False):
+            return                # retirement drains are not fault drains
         w.draining = False
         if w.alive:
             # a dead worker's drain ending is not a recovery: logging

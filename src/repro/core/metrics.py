@@ -42,6 +42,16 @@ MODEL_SUMMARY_FIELDS = (
     "latency_p50", "latency_p99", "ttft_p50", "ttft_p99",
     "slo_attainment", "goodput_rps", "preempt_rate", "n_workers")
 
+#: every key of ``Results.scaling_summary()`` (closed-loop autoscaling
+#: and cost economics); scripts/check_docs.py asserts each is
+#: documented in docs/AUTOSCALING.md
+SCALING_SUMMARY_FIELDS = (
+    "n_scale_up", "n_scale_down", "fleet_size_min", "fleet_size_max",
+    "fleet_size_avg", "fleet_size_final", "fleet_size_series",
+    "worker_seconds", "scale_up_lag_s", "billed_cost",
+    "cost_per_1m_tokens", "cost_per_1m_prefill_tokens",
+    "cost_per_1m_decode_tokens", "events")
+
 
 def _interp_percentile(s: Sequence[float], p: float) -> float:
     """Linear-interpolated percentile of an already-sorted sequence."""
@@ -369,6 +379,22 @@ class Results:
     worker_models: Optional[Dict[int, str]] = None
     #: the arch requests defaulted to when they arrived unstamped
     default_model: Optional[str] = None
+    #: autoscaler action log (repro.core.autoscale.ScaleEvent) when the
+    #: sim ran with SimSpec.autoscale enabled; scaling_summary() and
+    #: the byte-identity tests derive everything from it
+    scale_events: Optional[list] = None
+    #: wid -> (t_provisioned, t_retired-or-None): the span each worker
+    #: actually existed for.  Filled by every simulate() run (static
+    #: fleets get (0.0, None)); drives time-weighted billing and the
+    #: time-varying capacity accounting in availability_summary()
+    worker_spans: Optional[Dict[int, Tuple[float, Optional[float]]]] = None
+    #: wid -> device price (A100-relative $/s units, matching
+    #: explore.worker_price) for uptime-weighted cost
+    worker_prices: Optional[Dict[int, float]] = None
+    #: wid -> {"prefill_time", "decode_time", "prefill_tokens",
+    #: "decode_tokens", "busy_time"}: busy time split by phase, the
+    #: basis of the prefill/decode $/1M-tokens split
+    phase_stats: Optional[Dict[int, Dict[str, float]]] = None
     #: per-Results caches: finished list and sorted metric lists are
     #: computed once (the repeated-full-sort fix); safe because Results
     #: is read after the simulation has finished mutating requests
@@ -806,6 +832,91 @@ class Results:
             }
         return out
 
+    # ---- closed-loop autoscaling (docs/AUTOSCALING.md) ----------------
+    def scaling_summary(self) -> dict:
+        """Scale-event and cost-economics accounting for a (possibly)
+        time-varying fleet.  ``SCALING_SUMMARY_FIELDS`` lists every
+        returned key.
+
+        Billing is time-weighted: each worker bills its price over its
+        provisioned-to-retired span (``worker_spans``), so
+        ``billed_cost`` equals ``spec_price * sim_time`` only for
+        static fleets.  ``cost_per_1m_*_tokens`` splits the billed
+        cost by each worker's prefill/decode busy-time share (idle
+        time allocated pro rata; workers that never ran are excluded
+        from the split but still appear in ``billed_cost``)."""
+        T = max(self.sim_time, 1e-12)
+        spans = self.worker_spans or {
+            wid: (0.0, None)
+            for wid in range(self.n_workers or len(self.worker_mem)
+                             or 1)}
+        prices = self.worker_prices or {}
+        span_s = {wid: max(0.0, min(e if e is not None else T, T) - s)
+                  for wid, (s, e) in spans.items()}
+        worker_seconds = sum(span_s.values())
+        billed = sum(prices.get(wid, 0.0) * sp
+                     for wid, sp in span_s.items())
+        # fleet size as a step series over provision/retire breakpoints
+        deltas: List[Tuple[float, int]] = []
+        for wid, (s, e) in sorted(spans.items()):
+            deltas.append((min(s, T), 1))
+            if e is not None:
+                deltas.append((min(e, T), -1))
+        deltas.sort()
+        series: List[Tuple[float, int]] = []
+        size = 0
+        for t, d in deltas:
+            size += d
+            if series and series[-1][0] == t:
+                series[-1] = (t, size)
+            else:
+                series.append((t, size))
+        sizes = [s for _, s in series] or [0]
+        ph = self.phase_stats or {}
+        p_tok = sum(d["prefill_tokens"] for d in ph.values())
+        d_tok = sum(d["decode_tokens"] for d in ph.values())
+        if self.stats is not None:
+            tokens = self.stats.tokens
+        else:
+            tokens = sum(r.tokens_generated for r in self.finished)
+        p_cost = d_cost = 0.0
+        for wid, d in ph.items():
+            busy = d.get("busy_time", 0.0)
+            if busy <= 0:
+                continue
+            c = prices.get(wid, 0.0) * span_s.get(wid, 0.0)
+            p_cost += c * d["prefill_time"] / busy
+            d_cost += c * d["decode_time"] / busy
+        events = self.scale_events or []
+        n_up = sum(1 for e in events if e.action == "up_request")
+        n_down = sum(1 for e in events if e.action == "down_drain")
+        req_t: Dict[int, float] = {}
+        lags: List[float] = []
+        for e in events:
+            if e.action == "up_request":
+                req_t[e.worker] = e.time
+            elif e.action == "up_ready" and e.worker in req_t:
+                lags.append(e.time - req_t.pop(e.worker))
+        return {
+            "n_scale_up": n_up,
+            "n_scale_down": n_down,
+            "fleet_size_min": min(sizes),
+            "fleet_size_max": max(sizes),
+            "fleet_size_avg": worker_seconds / T,
+            "fleet_size_final": sizes[-1],
+            "fleet_size_series": series,
+            "worker_seconds": worker_seconds,
+            "scale_up_lag_s": sum(lags) / len(lags) if lags else 0.0,
+            "billed_cost": billed,
+            "cost_per_1m_tokens": billed / tokens * 1e6
+            if tokens else float("nan"),
+            "cost_per_1m_prefill_tokens": p_cost / p_tok * 1e6
+            if p_tok else float("nan"),
+            "cost_per_1m_decode_tokens": d_cost / d_tok * 1e6
+            if d_tok else float("nan"),
+            "events": list(events),
+        }
+
     # ------------------------------------------------------------------
     def availability_summary(self, *, target: float = 0.995,
                              window: Optional[float] = None) -> dict:
@@ -832,9 +943,31 @@ class Results:
         the model reload, so recovery cost counts as downtime); an
         interval still open at the end of the run is clipped to
         ``sim_time``.  Degraded (slowdown != 1) spans are tracked
-        separately — a straggler serves, slowly."""
+        separately — a straggler serves, slowly.
+
+        With a time-varying fleet (autoscaling), capacity accounting
+        is over each worker's *provisioned* span (``worker_spans``),
+        not ``n_workers * sim_time``: a replica that existed for half
+        the run contributes half a worker-run of capacity, and its
+        not-yet-provisioned / already-retired time counts as absent
+        for service availability but is not charged as downtime.
+        Static fleets reduce to the historical fixed-``n_workers``
+        formulas exactly."""
         T = max(self.sim_time, 1e-12)
-        n = self.n_workers or len(self.worker_mem) or 1
+        spans = self.worker_spans
+        if spans:
+            wids = sorted(spans)
+            span_of = {
+                wid: max(0.0, min(e if e is not None else T, T) - s)
+                for wid, (s, e) in spans.items()}
+        else:
+            # legacy surface (hand-built Results): fixed fleet, every
+            # worker provisioned for the whole run
+            wids = list(range(self.n_workers or len(self.worker_mem)
+                              or 1))
+            span_of = {wid: T for wid in wids}
+        n = len(wids)
+        provisioned_s = sum(span_of.values()) or T
         events = sorted(self.fault_events or [],
                         key=lambda e: (e.time, e.worker))
         down: Dict[int, List[Tuple[float, float]]] = {}
@@ -866,7 +999,7 @@ class Results:
             degraded += max(0.0, T - t0)
         downtime_per_worker = {
             wid: sum(b - a for a, b in down.get(wid, ()))
-            for wid in range(n)}
+            for wid in wids}
         capacity_down = sum(downtime_per_worker.values())
         # service downtime: sweep the interval deltas, accumulate the
         # spans where every one of the nn workers is down at once
@@ -890,7 +1023,18 @@ class Results:
                     t_all = None
             return total
 
-        service_down = _all_down(down.values(), n)
+        # for service availability a worker is also "absent" outside
+        # its provisioned span: before a scale-up lands and after a
+        # retirement the replica cannot serve (static fleets add no
+        # intervals here, preserving the historical numbers)
+        service_iv = {wid: list(down.get(wid, ())) for wid in wids}
+        if spans:
+            for wid, (s, e) in spans.items():
+                if s > 0:
+                    service_iv[wid].append((0.0, min(s, T)))
+                if e is not None and e < T:
+                    service_iv[wid].append((e, T))
+        service_down = _all_down(service_iv.values(), n)
         window_s = window if window is not None else T
         scale = window_s / T
         error_budget_s = (1.0 - target) * window_s
@@ -922,24 +1066,26 @@ class Results:
                                    len(wids))
                 m_cap = sum(downtime_per_worker.get(wid, 0.0)
                             for wid in wids)
+                m_span = sum(span_of.get(wid, T) for wid in wids)
                 models[m] = {
                     "service_availability": 1.0 - m_down / T,
                     "capacity_availability":
-                        1.0 - m_cap / (len(wids) * T),
+                        1.0 - m_cap / max(m_span, 1e-12),
                     "n_workers": len(wids)}
         return {
             "service_availability": 1.0 - service_down / T,
-            "capacity_availability": 1.0 - capacity_down / (n * T),
+            "capacity_availability":
+                1.0 - capacity_down / provisioned_s,
             "availability_per_worker": {
-                wid: 1.0 - dt / T
+                wid: 1.0 - dt / max(span_of.get(wid, T), 1e-12)
                 for wid, dt in downtime_per_worker.items()},
             "downtime_per_worker": downtime_per_worker,
             "service_downtime_s": service_down,
             "capacity_downtime_s": capacity_down,
             "degraded_s": degraded,
             "n_failures": n_failures,
-            "mtbf_observed_s": (n * T - capacity_down) / n_failures
-            if n_failures else None,
+            "mtbf_observed_s": (provisioned_s - capacity_down)
+            / n_failures if n_failures else None,
             "mttr_observed_s": capacity_down / n_failures
             if n_failures else None,
             "target": target,

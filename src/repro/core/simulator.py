@@ -51,6 +51,7 @@ from typing import Dict, List, Optional, Sequence, Union
 from repro.configs import get_config
 from repro.configs.base import ArchConfig
 from repro.core import comm as comm_mod
+from repro.core.autoscale import Autoscaler, AutoscaleSpec
 from repro.core.breakpoints import Hooks, disagg_hooks
 from repro.core.costmodel.backends import (CostBackend, PipelineBackend,
                                            RooflineBackend, TabularBackend)
@@ -190,6 +191,36 @@ class SimSpec:
     #: latency attribution.  None (default) is the zero-cost path: no
     #: recorder objects exist and every tap is a single is-None check
     obs: Optional[ObsSpec] = None
+    #: closed-loop autoscaling (docs/AUTOSCALING.md): a daemon process
+    #: samples queue depth / utilization / SLO attainment and scales the
+    #: fleet between min_replicas and max_replicas at runtime, paying
+    #: model-reload + warm-up lag on the way up and draining on the way
+    #: down.  None (or a disabled spec) keeps the fleet static,
+    #: byte-identical to the pre-autoscaling simulator
+    autoscale: Optional[AutoscaleSpec] = None
+
+
+class WorkerRegistry(list):
+    """The fleet as a *dynamic* worker registry (docs/AUTOSCALING.md).
+
+    A list subclass, so every pre-autoscaling consumer — global
+    schedulers iterating the fleet, ``workers[wid]`` indexing, the
+    fault injector, the obs sampler — keeps working unchanged, while
+    the autoscaler can grow it at runtime through ``add``.  The
+    registry is append-only: wids are dense list positions (asserted
+    on add), and scale-down retires a worker *in place*
+    (``Worker.retired``) instead of removing it, so wid indexing and
+    per-worker stats stay stable for the whole run."""
+
+    def add(self, worker) -> None:
+        if worker.wid != len(self):
+            raise ValueError(f"worker wid {worker.wid} breaks dense "
+                             f"indexing (registry holds {len(self)})")
+        self.append(worker)
+
+    def n_serving(self) -> int:
+        """Workers currently accepting dispatches."""
+        return sum(1 for w in self if w.alive and not w.draining)
 
 
 class Simulation:
@@ -237,7 +268,7 @@ class Simulation:
         self.admission: Optional[AdmissionController] = \
             AdmissionController(self.env, spec.tenants, self) \
             if spec.tenants else None
-        self.workers: List[Worker] = []
+        self.workers: WorkerRegistry = WorkerRegistry()
         self._build_workers()
         self._validate_models()
         #: requests held at the dispatcher during a cluster-wide outage
@@ -249,6 +280,13 @@ class Simulation:
             if spec.faults or (spec.chaos is not None
                                and spec.chaos.processes) else None
         self._n_finished = 0
+        #: closed-loop autoscaler (docs/AUTOSCALING.md); None (or a
+        #: disabled spec) keeps the fleet static — no daemon process,
+        #: no extra events, byte-identical to the pre-autoscale path
+        self.autoscaler: Optional[Autoscaler] = \
+            Autoscaler(self, spec.autoscale) \
+            if spec.autoscale is not None and spec.autoscale.enabled \
+            else None
         #: model -> (kv_bytes_per_token, state_bytes_per_seq) so the
         #: migration path prices the KV transfer against the request's
         #: own arch, not the fleet default
@@ -287,92 +325,131 @@ class Simulation:
                 f"ParallelSpec(pp={par.pp}) requires backend='roofline' "
                 f"(got {spec.backend!r}); supply a pipeline-aware "
                 f"backend via backends_by_worker instead")
+        # per-sim invariants reused by runtime worker additions
+        # (add_worker): a scaled-up clone must be built exactly like an
+        # initial worker
+        self._disagg = disagg
+        self._draft_cfg = draft_cfg
+        self._cluster = cluster
         #: data parallelism: replicate the whole worker set, each copy a
         #: full tp x pp serving instance behind the global scheduler
         worker_specs = list(spec.workers) * par.replicas
         for i, ws in enumerate(worker_specs):
-            tp = effective_tp(ws, par)
             #: replicas clone the original worker set, so per-worker
             #: config keyed by index (backends_by_worker) follows the
             #: original position, not the expanded one
-            base_i = i % len(spec.workers)
-            # per-worker arch (docs/HETEROGENEITY.md): None inherits the
-            # fleet default; everything below — memory sizing, cost
-            # backend, encoder tokens — resolves against this config
-            if ws.arch is None:
-                wcfg = self.cfg
-            elif isinstance(ws.arch, ArchConfig):
-                wcfg = ws.arch
-            else:
-                wcfg = get_config(ws.arch)
-            self._model_cfgs.setdefault(wcfg.name, wcfg)
-            hw = HARDWARE[ws.hw]
-            if ws.hw_overrides:
-                hw = hw.with_(**ws.hw_overrides)
-            if ws.mem_cap_override is not None:
-                hw = hw.with_(mem_cap=ws.mem_cap_override)
-            # a pp-stage worker owns pp devices: its aggregate KV budget
-            # is pp device capacities minus one full (tp-sharded) copy of
-            # the weights, which the stages hold 1/pp each
-            mem_cfg = MemoryConfig.from_model(
-                wcfg, hw.mem_cap * par.pp, block_size=spec.block_size,
-                dtype_bytes=spec.dtype_bytes, tp=tp,
-                gpu_mem_util=ws.gpu_mem_util,
-                watermark=max(0.0, 1.0 - ws.max_mem_ratio),
-                prefix_sharing=spec.prefix_sharing)
-            swap = None
-            if spec.preemption_mode == "swap":
-                swap = SwapManager(SwapConfig(
-                    pcie_bw=hw.pcie_bw,
-                    host_capacity_bytes=spec.host_mem_cap
-                    if spec.host_mem_cap is not None else hw.host_mem_cap,
-                    kv_bytes_per_token=mem_cfg.kv_bytes_per_token,
-                    state_bytes_per_seq=mem_cfg.state_bytes_per_seq,
-                    block_size=mem_cfg.block_size))
-            if spec.backends_by_worker and base_i in spec.backends_by_worker:
-                backend = spec.backends_by_worker[base_i]
-            elif spec.backend == "tabular":
-                backend = TabularBackend.fit(spec.backend_samples)
-            elif par.pp > 1:
-                backend = PipelineBackend.for_model(
-                    wcfg, hw,
-                    ParallelSpec(tp=tp, pp=par.pp,
-                                 microbatches=par.microbatches),
-                    cluster, dtype_bytes=spec.dtype_bytes)
-            else:
-                backend = RooflineBackend.for_model(
-                    wcfg, hw, tp=tp, dtype_bytes=spec.dtype_bytes,
-                    cluster=cluster)
-            sched = make_local_scheduler(
-                spec.local_policy, max_batch=spec.max_batch,
-                max_batched_tokens=spec.max_batched_tokens,
-                chunked_prefill=spec.chunked_prefill,
-                prefill_chunk=spec.prefill_chunk)
-            hooks = disagg_hooks() if disagg else Hooks()
-            enc_tokens = wcfg.enc_seq_len \
-                if wcfg.family in ("audio", "encdec") else 0
-            draft_backend = None
-            if draft_cfg is not None:
-                # draft model runs on the same chip as its worker (with
-                # optional overrides, e.g. a dedicated draft unit)
-                dhw = hw.with_(**spec.spec_decode.draft_hw_overrides) \
-                    if spec.spec_decode.draft_hw_overrides else hw
-                draft_backend = RooflineBackend.for_model(
-                    draft_cfg, dhw, tp=tp, dtype_bytes=spec.dtype_bytes,
-                    cluster=cluster)
-            w = Worker(self.env, i, hw, backend, mem_cfg, sched,
-                       run_prefill=ws.role in ("both", "prefill"),
-                       run_decode=ws.role in ("both", "decode"),
-                       cluster=self, pool=self.pool, hooks=hooks,
-                       enc_tokens_per_req=enc_tokens,
-                       discipline=self.global_sched.discipline(),
-                       spec_decode=spec.spec_decode,
-                       draft_backend=draft_backend, swap=swap,
-                       obs=self.obs, model=wcfg.name, tp=tp)
-            w.slowdown = ws.slowdown
-            if self.obs is not None:
-                self.obs.install(w)
-            self.workers.append(w)
+            self._make_worker(ws, i, i % len(spec.workers))
+
+    def _make_worker(self, ws: WorkerSpec, wid: int,
+                     base_i: int) -> Worker:
+        """Build one worker from its spec and register it — shared by
+        the initial fleet construction and runtime scale-up
+        (``add_worker``), so the two can never diverge."""
+        spec = self.spec
+        par = spec.parallel
+        cluster = self._cluster
+        tp = effective_tp(ws, par)
+        # per-worker arch (docs/HETEROGENEITY.md): None inherits the
+        # fleet default; everything below — memory sizing, cost
+        # backend, encoder tokens — resolves against this config
+        if ws.arch is None:
+            wcfg = self.cfg
+        elif isinstance(ws.arch, ArchConfig):
+            wcfg = ws.arch
+        else:
+            wcfg = get_config(ws.arch)
+        self._model_cfgs.setdefault(wcfg.name, wcfg)
+        hw = HARDWARE[ws.hw]
+        if ws.hw_overrides:
+            hw = hw.with_(**ws.hw_overrides)
+        price = hw.price * tp * par.pp   # mirrors explore.worker_price
+        if ws.mem_cap_override is not None:
+            hw = hw.with_(mem_cap=ws.mem_cap_override)
+        # a pp-stage worker owns pp devices: its aggregate KV budget
+        # is pp device capacities minus one full (tp-sharded) copy of
+        # the weights, which the stages hold 1/pp each
+        mem_cfg = MemoryConfig.from_model(
+            wcfg, hw.mem_cap * par.pp, block_size=spec.block_size,
+            dtype_bytes=spec.dtype_bytes, tp=tp,
+            gpu_mem_util=ws.gpu_mem_util,
+            watermark=max(0.0, 1.0 - ws.max_mem_ratio),
+            prefix_sharing=spec.prefix_sharing)
+        swap = None
+        if spec.preemption_mode == "swap":
+            swap = SwapManager(SwapConfig(
+                pcie_bw=hw.pcie_bw,
+                host_capacity_bytes=spec.host_mem_cap
+                if spec.host_mem_cap is not None else hw.host_mem_cap,
+                kv_bytes_per_token=mem_cfg.kv_bytes_per_token,
+                state_bytes_per_seq=mem_cfg.state_bytes_per_seq,
+                block_size=mem_cfg.block_size))
+        if spec.backends_by_worker and base_i in spec.backends_by_worker:
+            backend = spec.backends_by_worker[base_i]
+        elif spec.backend == "tabular":
+            backend = TabularBackend.fit(spec.backend_samples)
+        elif par.pp > 1:
+            backend = PipelineBackend.for_model(
+                wcfg, hw,
+                ParallelSpec(tp=tp, pp=par.pp,
+                             microbatches=par.microbatches),
+                cluster, dtype_bytes=spec.dtype_bytes)
+        else:
+            backend = RooflineBackend.for_model(
+                wcfg, hw, tp=tp, dtype_bytes=spec.dtype_bytes,
+                cluster=cluster)
+        sched = make_local_scheduler(
+            spec.local_policy, max_batch=spec.max_batch,
+            max_batched_tokens=spec.max_batched_tokens,
+            chunked_prefill=spec.chunked_prefill,
+            prefill_chunk=spec.prefill_chunk)
+        hooks = disagg_hooks() if self._disagg else Hooks()
+        enc_tokens = wcfg.enc_seq_len \
+            if wcfg.family in ("audio", "encdec") else 0
+        draft_backend = None
+        if self._draft_cfg is not None:
+            # draft model runs on the same chip as its worker (with
+            # optional overrides, e.g. a dedicated draft unit)
+            dhw = hw.with_(**spec.spec_decode.draft_hw_overrides) \
+                if spec.spec_decode.draft_hw_overrides else hw
+            draft_backend = RooflineBackend.for_model(
+                self._draft_cfg, dhw, tp=tp,
+                dtype_bytes=spec.dtype_bytes, cluster=cluster)
+        w = Worker(self.env, wid, hw, backend, mem_cfg, sched,
+                   run_prefill=ws.role in ("both", "prefill"),
+                   run_decode=ws.role in ("both", "decode"),
+                   cluster=self, pool=self.pool, hooks=hooks,
+                   enc_tokens_per_req=enc_tokens,
+                   discipline=self.global_sched.discipline(),
+                   spec_decode=spec.spec_decode,
+                   draft_backend=draft_backend, swap=swap,
+                   obs=self.obs, model=wcfg.name, tp=tp)
+        w.slowdown = ws.slowdown
+        w.spec_ws = ws
+        w.price = price
+        if self.obs is not None:
+            self.obs.install(w)
+        self.workers.add(w)
+        return w
+
+    def add_worker(self, ws: WorkerSpec, *, base_i: int = 0,
+                   provisioning: bool = False) -> Worker:
+        """Grow the fleet at runtime (autoscaler scale-up): build a
+        worker from ``ws`` exactly as the initial fleet was built, at
+        the next dense wid.  With ``provisioning=True`` it starts
+        outside every dispatch path (``alive=False``, so even the
+        eligibility fallback skips it) until the model load finishes
+        and ``Worker.recover`` brings it up."""
+        w = self._make_worker(ws, len(self.workers), base_i)
+        if provisioning:
+            w.alive = False
+            w.provisioning = True
+        if w.model not in self._kv_by_model:
+            # a runtime-added model must be migration-priceable too
+            cfg = self._model_cfgs[w.model]
+            self._kv_by_model[w.model] = (
+                kv_bytes_per_token(cfg, self.spec.dtype_bytes),
+                state_bytes_per_seq(cfg, self.spec.dtype_bytes))
+        return w
 
     def _validate_models(self) -> None:
         """Fail fast on fleet/workload model mismatches: every model the
@@ -446,6 +523,8 @@ class Simulation:
     def on_request_finished(self, req: Request) -> None:
         self._n_finished += 1
         self._n_live -= 1
+        if self.autoscaler is not None:
+            self.autoscaler.on_finish(req)
         if self.obs is not None:
             # derive the conserved component breakdown while the
             # timestamps are final, before any streaming fold drops it
@@ -572,11 +651,17 @@ class Simulation:
         self.env.process(self._dispatcher(), name="dispatcher")
         if self.fault_injector is not None:
             self.fault_injector.start()
+        if self.autoscaler is not None:
+            self.autoscaler.start()
         if self.obs is not None and self.obs.ts is not None:
             self.env.process(self._sampler(), name="obs-sampler",
                              daemon=True)
         self.env.run(until=self.spec.until)
         wall = _time.perf_counter() - t0
+        if self.autoscaler is not None:
+            # a drained victim idle at the horizon retires now, so its
+            # billing span closes at the time it stopped working
+            self.autoscaler._finalize_retirements(self.env.now)
         if self.obs is not None:
             if self.obs.ts is not None:
                 # closing frame at the horizon (also covers sims shorter
@@ -624,6 +709,18 @@ class Simulation:
             fault_events=self.fault_injector.events
             if self.fault_injector is not None else None,
             n_workers=len(self.workers),
+            scale_events=self.autoscaler.events
+            if self.autoscaler is not None else None,
+            worker_spans={w.wid: (w.t_provisioned, w.t_retired)
+                          for w in self.workers},
+            worker_prices={w.wid: w.price for w in self.workers},
+            phase_stats={
+                w.wid: {"prefill_time": w.prefill_time,
+                        "decode_time": w.decode_time,
+                        "prefill_tokens": w.prefill_tokens,
+                        "decode_tokens": w.decode_tokens,
+                        "busy_time": w.busy_time}
+                for w in self.workers},
             trace=self.obs.trace if self.obs is not None else None,
             timeseries=self.obs.ts if self.obs is not None else None)
 

@@ -93,6 +93,24 @@ class Worker:
         #: draining (repro.core.faults): alive and finishing its queue,
         #: but skipped by the global scheduler for new dispatches
         self.draining = False
+        #: autoscaler lifecycle (repro.core.autoscale): a provisioning
+        #: worker was just added and is paying its model-load lag
+        #: (alive=False keeps it out of every dispatch path, including
+        #: the _eligible alive-fallback); retiring = draining toward
+        #: permanent removal; retired = out of the serving set for
+        #: good, stats frozen, billing stopped
+        self.provisioning = False
+        self.retiring = False
+        self.retired = False
+        #: billing surface (explore.uptime_weighted_price): per-device
+        #: price x devices, stamped by the simulator's worker builder,
+        #: and the provisioned-to-retired span actually billed
+        self.price = 0.0
+        self.t_provisioned = env.now
+        self.t_retired: Optional[float] = None
+        #: the WorkerSpec this worker was built from (None for bare
+        #: unit-test workers); the autoscaler manages template-equal ones
+        self.spec_ws = None
         #: post-recovery warm-up (docs/RELIABILITY.md): the next
         #: ``_warmup_left`` iterations cost ``_warmup_factor``x
         self._warmup_left = 0
@@ -113,6 +131,14 @@ class Worker:
         self._running_load = 0
         self.iterations = 0
         self.busy_time = 0.0
+        #: busy_time split by phase, each iteration's cost allocated
+        #: proportionally to its prefill vs decode token counts — the
+        #: basis of the $/1M-tokens prefill/decode split
+        #: (Results.scaling_summary, docs/AUTOSCALING.md)
+        self.prefill_time = 0.0
+        self.decode_time = 0.0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
         #: cheap cumulative counters the time-series recorder samples
         self.tokens_emitted = 0
         self.preempt_events = 0
@@ -288,6 +314,17 @@ class Worker:
             now = env.now
             self.iterations += 1
             self.busy_time += t
+            p_tok = sum(c for _r, c, _b in plan.prefill)
+            d_tok = len(plan.decode)
+            if plan.spec_decode:
+                d_tok += len(plan.spec_decode) \
+                    * self.spec_decode.verify_tokens
+            tot = p_tok + d_tok
+            if tot:
+                self.prefill_time += t * (p_tok / tot)
+                self.decode_time += t * (d_tok / tot)
+                self.prefill_tokens += p_tok
+                self.decode_tokens += d_tok
             if obs is not None and obs.attribution:
                 # before token emission, so an iteration that produces
                 # the first token still banks on the TTFT side
@@ -423,8 +460,28 @@ class Worker:
 
     def recover(self, warmup_iters: int = 0,
                 warmup_factor: float = 1.0) -> None:
+        if self.retired:
+            # a revival landing after the autoscaler retired the worker
+            # must not resurrect it into the serving set
+            return
         self.alive = True
-        self.draining = False
+        # a retiring worker stays out of dispatch even across a
+        # fault-recovery cycle: retirement is not cancellable by repair
+        self.draining = self.retiring
         self._warmup_left = warmup_iters
         self._warmup_factor = warmup_factor
         self._wakeup()
+
+    # ---- autoscaler lifecycle (repro.core.autoscale) -----------------
+    def begin_retire(self) -> None:
+        """Scale-down: stop taking dispatches, finish what's queued."""
+        self.retiring = True
+        self.draining = True
+
+    def finish_retire(self, now: float) -> None:
+        """Queue drained: leave the serving set permanently.  The
+        worker object stays in the registry so per-worker stats and
+        wid indexing survive; billing stops here."""
+        self.retired = True
+        self.alive = False
+        self.t_retired = now

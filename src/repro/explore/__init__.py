@@ -12,4 +12,5 @@ from repro.explore.pareto import (  # noqa: F401
     dominates, pareto_frontier, write_rows_csv)
 from repro.explore.sweep import (  # noqa: F401
     DEFAULT_OBJECTIVES, SweepResult, SweepSpec, default_metrics,
-    grid_points, point_key, run_sweep, spec_price)
+    grid_points, point_key, run_sweep, spec_price,
+    uptime_weighted_price)

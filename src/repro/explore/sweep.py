@@ -99,10 +99,35 @@ def worker_price(ws, parallel) -> float:
 
 def spec_price(spec: SimSpec) -> float:
     """A100-relative price of the cluster a spec occupies: the sum of
-    per-worker ``worker_price`` over the worker list, times replicas."""
+    per-worker ``worker_price`` over the worker list, times replicas.
+    This is the *static* (fleet-as-configured) rate; for runs where
+    the autoscaler changed the fleet, bill with
+    ``uptime_weighted_price`` instead."""
     par = spec.parallel
     return sum(worker_price(ws, par) for ws in spec.workers) \
         * par.replicas
+
+
+def uptime_weighted_price(spec: SimSpec, res: Optional[Results] = None
+                          ) -> float:
+    """Time-weighted $-per-hour billing (docs/AUTOSCALING.md): the
+    effective fleet price rate, with each worker billed only over its
+    provisioned-to-retired span —
+    ``sum_w price_w * span_w / sim_time``.  A worker alive for half
+    the horizon bills half its rate; a static fleet bills exactly
+    ``spec_price`` (unit-tested in tests/test_autoscale.py).  Falls
+    back to ``spec_price`` when the run carries no span bookkeeping
+    (hand-built Results, cached sweep rows)."""
+    spans = getattr(res, "worker_spans", None) if res is not None \
+        else None
+    prices = getattr(res, "worker_prices", None) if res is not None \
+        else None
+    if not spans or not prices:
+        return spec_price(spec)
+    T = max(res.sim_time, 1e-12)
+    return sum(prices.get(wid, 0.0)
+               * (min(e if e is not None else T, T) - s)
+               for wid, (s, e) in spans.items()) / T
 
 
 def default_metrics(spec: SimSpec, res: Results) -> Dict:
@@ -114,8 +139,12 @@ def default_metrics(spec: SimSpec, res: Results) -> Dict:
     Streaming/drop-mode specs (``retain_requests=False``) are read from
     the ``StreamingStats`` sketches instead of the (empty) request
     list; per-gap TBT is not sketched, so ``p99_tbt`` is NaN there —
-    exclude it from the objectives for streaming sweeps."""
-    price = spec_price(spec)
+    exclude it from the objectives for streaming sweeps.
+
+    ``price`` is uptime-weighted (docs/AUTOSCALING.md): identical to
+    ``spec_price`` for static fleets, but an autoscaled run bills each
+    worker only over its provisioned span."""
+    price = uptime_weighted_price(spec, res)
     if res.stats is not None:
         st = res.stats
         tokens = st.tokens

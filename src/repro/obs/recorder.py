@@ -126,6 +126,14 @@ class ObsRecorder:
             self.trace.instant(f"fault.{kind}", now,
                                WORKER_PID_BASE + wid, args or {})
 
+    def on_scale(self, wid: int, action: str, now: float) -> None:
+        """Autoscaler instant (repro.core.autoscale) on the worker's
+        trace lane: ``scale.up_request`` / ``scale.up_ready`` /
+        ``scale.down_drain`` / ``scale.down_retired``."""
+        if self.trace is not None:
+            self.trace.instant(f"scale.{action}", now,
+                               WORKER_PID_BASE + wid, {})
+
     def on_migrate_done(self, req, now: float, dur: float) -> None:
         if self.trace is not None:
             self.trace.req_phase(req, "queue", now)

@@ -1,0 +1,75 @@
+"""Regenerate the golden backward-compat pin for the autoscaling
+refactor (tests/test_autoscale.py::test_golden_static_fleet_pin).
+
+The pin freezes a *static-fleet* run — generated before the
+fixed-list -> dynamic-worker-registry refactor landed — as JSON: a run
+with ``SimSpec.autoscale`` left at its default (``None``) or set to a
+disabled ``AutoscaleSpec`` must reproduce these bytes exactly.  Any
+change to worker construction, dispatch order or the billing
+bookkeeping that shifts this run is a backward-compat break.
+Regenerate ONLY when an intentional cost-model change invalidates the
+pin:
+
+    PYTHONPATH=src python tests/golden/gen_autoscale_pin.py
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.faults import ChaosSpec, FaultSpec
+from repro.core.simulator import SimSpec, WorkerSpec, simulate
+from repro.core.workload import WorkloadSpec
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+PIN_PATH = os.path.join(HERE, "autoscale_pin.json")
+
+
+def pinned_spec() -> SimSpec:
+    """The frozen run: three static workers, diurnal arrivals (the
+    workload shape the autoscaler targets), swap preemption and one
+    scheduled fault with costly recovery — every code path the
+    dynamic-registry refactor rewires, with scaling itself off."""
+    return SimSpec(
+        arch="llama2-7b",
+        workers=[WorkerSpec(hw="A100", gpu_mem_util=0.3)] * 3,
+        workload=WorkloadSpec(num_requests=150, qps=12.0, seed=11,
+                              arrival="diurnal", diurnal_period=20.0,
+                              diurnal_amplitude=0.8),
+        preemption_mode="swap",
+        faults=[FaultSpec(time=4.0, worker=1, kind="fail", duration=1.0)],
+        chaos=ChaosSpec(reload_time=0.5, warmup_iters=1,
+                        warmup_factor=2.0))
+
+
+def snapshot(res) -> dict:
+    """Byte-exact observable surface of a run: floats round-trip via
+    repr in JSON, so equality on the loaded dict is byte equality."""
+    return {
+        "sim_time": res.sim_time,
+        "requests": [
+            {"id": r.id, "t_first_token": r.t_first_token,
+             "t_finish": r.t_finish, "token_times": r.token_times,
+             "preempt_count": r.preempt_count,
+             "swap_out_count": r.swap_out_count,
+             "swap_in_count": r.swap_in_count}
+            for r in sorted(res.requests, key=lambda q: q.id)],
+        "mem_stats": {str(k): v for k, v in (res.mem_stats or {}).items()},
+        "swap_stats": {str(k): v for k, v in (res.swap_stats or {}).items()},
+        "fault_events": [
+            {"time": e.time, "worker": e.worker, "kind": e.kind,
+             "factor": e.factor}
+            for e in (res.fault_events or [])],
+    }
+
+
+def main() -> None:
+    res = simulate(pinned_spec())
+    with open(PIN_PATH, "w") as f:
+        json.dump(snapshot(res), f, indent=1, sort_keys=True)
+    print(f"wrote {PIN_PATH}: {len(res.requests)} requests, "
+          f"sim_time={res.sim_time}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,391 @@
+"""Autoscaling layer (repro.core.autoscale, docs/AUTOSCALING.md):
+property-based invariants over randomized policies x faults x
+preemption x streaming, the frozen static-fleet golden pin, drain-based
+scale-down losslessness, time-weighted billing, and the time-varying
+availability accounting regression."""
+import json
+import math
+import os
+import sys
+
+import pytest
+
+from repro.core.autoscale import (AUTOSCALE_POLICIES, AutoscaleSpec,
+                                  ScaleEvent)
+from repro.core.faults import ChaosSpec, FaultEvent, FaultSpec
+from repro.core.metrics import Results, SCALING_SUMMARY_FIELDS
+from repro.core.simulator import SimSpec, WorkerSpec, simulate
+from repro.core.workload import WorkloadSpec
+from repro.explore.sweep import spec_price, uptime_weighted_price
+from repro.obs import ObsSpec
+
+from _hypothesis_compat import given, settings, st
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "golden")
+
+
+# ---------------------------------------------------------------------------
+# helpers (shared idiom with tests/test_chaos.py)
+# ---------------------------------------------------------------------------
+def _sig(res):
+    """Byte-level signature of a run: per-request ids and timestamps."""
+    return [(r.id, r.t_first_token, r.t_finish, tuple(r.token_times))
+            for r in sorted(res.requests, key=lambda r: r.id)]
+
+
+def _assert_exactly_once(res, n_expected):
+    fin = [r for r in res.requests if r.t_finish is not None]
+    assert len(fin) == n_expected, \
+        f"lost requests: {n_expected - len(fin)}"
+    ids = [r.id for r in res.requests]
+    assert len(ids) == len(set(ids)), "duplicated request objects"
+    for r in fin:
+        assert r.tokens_generated == r.output_len, r.id
+        assert len(r.token_times) == r.output_len, r.id
+
+
+def _assert_attribution_conserved(res, tol=1e-6):
+    for r in res.requests:
+        if r.t_finish is None or r.obs is None or r.obs.final is None:
+            continue
+        f = r.obs.final
+        ttft = r.t_first_token - r.arrival_time
+        assert abs(sum(f["ttft"].values()) - ttft) < tol, r.id
+        dec = r.t_finish - r.t_first_token
+        assert abs(sum(f["decode"].values()) - dec) < tol, r.id
+
+
+def _spec(policy, *, with_faults=False, mode="recompute",
+          streaming=False, n_req=60, qps=25.0, seed=9,
+          min_replicas=1, max_replicas=4, interval=1.0, cooldown=2.0,
+          n_workers=2, **as_kw):
+    faults = [FaultSpec(time=3.0, worker=1, kind="fail", duration=1.0),
+              FaultSpec(time=6.0, worker=0, kind="degrade", factor=3.0,
+                        duration=2.0)] if with_faults else []
+    return SimSpec(
+        workers=[WorkerSpec(gpu_mem_util=0.25)
+                 for _ in range(n_workers)],
+        workload=WorkloadSpec(num_requests=n_req, qps=qps, seed=seed,
+                              arrival="diurnal", diurnal_period=15.0,
+                              diurnal_amplitude=0.9),
+        preemption_mode=mode,
+        streaming=streaming,
+        faults=faults,
+        chaos=ChaosSpec(reload_time=0.5, warmup_iters=1,
+                        warmup_factor=2.0),
+        autoscale=AutoscaleSpec(
+            policy=policy, min_replicas=min_replicas,
+            max_replicas=max_replicas, interval=interval,
+            cooldown=cooldown, reload_time=0.5, warmup_iters=1,
+            warmup_factor=2.0, **as_kw),
+        obs=ObsSpec(attribution=True))
+
+
+# ---------------------------------------------------------------------------
+# property suite: randomized policies x faults x preemption x streaming
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(policy=st.sampled_from(list(AUTOSCALE_POLICIES)),
+       with_faults=st.sampled_from([False, True]),
+       mode=st.sampled_from(["recompute", "swap"]),
+       streaming=st.sampled_from([False, True]),
+       seed=st.integers(0, 40))
+def test_autoscale_invariants(policy, with_faults, mode, streaming,
+                              seed):
+    """The chaos invariant suite holds while the fleet is scaling:
+    every request finishes exactly once (scale-down drains lose
+    nothing), latency attribution stays conserved, and the same seed
+    reproduces the run byte-for-byte *including* the scale-event
+    log."""
+    spec = _spec(policy, with_faults=with_faults, mode=mode,
+                 streaming=streaming, seed=seed)
+    r1 = simulate(spec)
+    _assert_exactly_once(r1, spec.workload.num_requests)
+    _assert_attribution_conserved(r1)
+    sc = r1.scaling_summary()
+    assert set(SCALING_SUMMARY_FIELDS) <= set(sc)
+    a = spec.autoscale
+    assert a.min_replicas <= sc["fleet_size_max"] <= a.max_replicas
+    # min_replicas holds at every instant, including while earlier
+    # victims are still draining (the n_leaving bound in _tick)
+    assert sc["fleet_size_min"] >= a.min_replicas
+    for e in r1.scale_events:
+        assert a.min_replicas <= e.fleet_size <= a.max_replicas, e
+    r2 = simulate(spec)
+    assert _sig(r1) == _sig(r2), "same seed must be byte-identical"
+    assert r1.scale_events == r2.scale_events, \
+        "scale-event log must be deterministic"
+    assert r1.sim_time == r2.sim_time
+
+
+# ---------------------------------------------------------------------------
+# golden backward-compat pin: the dynamic-registry refactor must not
+# move a single byte of a pre-refactor static-fleet run
+# ---------------------------------------------------------------------------
+def _load_pin_module():
+    sys.path.insert(0, GOLDEN_DIR)
+    try:
+        from gen_autoscale_pin import pinned_spec, snapshot
+    finally:
+        sys.path.pop(0)
+    return pinned_spec, snapshot
+
+
+def test_golden_static_fleet_pin():
+    pinned_spec, snapshot = _load_pin_module()
+    with open(os.path.join(GOLDEN_DIR, "autoscale_pin.json")) as f:
+        want = json.load(f)
+    got = json.loads(json.dumps(snapshot(simulate(pinned_spec()))))
+    assert got == want, \
+        "static-fleet run diverged from the pre-refactor golden pin"
+
+
+def test_golden_pin_with_disabled_autoscaler():
+    """AutoscaleSpec(enabled=False) must be byte-inert: same pin."""
+    pinned_spec, snapshot = _load_pin_module()
+    spec = pinned_spec()
+    spec.autoscale = AutoscaleSpec(enabled=False)
+    res = simulate(spec)
+    with open(os.path.join(GOLDEN_DIR, "autoscale_pin.json")) as f:
+        want = json.load(f)
+    got = json.loads(json.dumps(snapshot(res)))
+    assert got == want, "disabled autoscaler perturbed the run"
+    assert res.scale_events is None
+
+
+# ---------------------------------------------------------------------------
+# scale-up / scale-down mechanics
+# ---------------------------------------------------------------------------
+def test_scale_up_pays_provisioning_lag():
+    """A cloned worker becomes dispatch-eligible only after
+    reload_time: every up_request -> up_ready pair is separated by
+    exactly the configured lag (warm-up slowdown is paid after)."""
+    spec = _spec("threshold", n_workers=1, qps=40.0, n_req=120,
+                 queue_high=1.0)
+    res = simulate(spec)
+    sc = res.scaling_summary()
+    assert sc["n_scale_up"] >= 1, "burst never triggered a scale-up"
+    req_t = {}
+    lags = []
+    for e in res.scale_events:
+        if e.action == "up_request":
+            req_t[e.worker] = e.time
+        elif e.action == "up_ready":
+            lags.append(e.time - req_t.pop(e.worker))
+    assert lags and all(abs(lag - 0.5) < 1e-9 for lag in lags), lags
+    assert abs(sc["scale_up_lag_s"] - 0.5) < 1e-9
+
+
+def test_scale_down_drains_without_loss():
+    """Over-provisioned fleet under light load retires workers; no
+    request is lost and retirements land only on empty workers."""
+    spec = _spec("threshold", n_workers=4, qps=2.0, n_req=40,
+                 queue_low=2.0, util_low=0.9)
+    res = simulate(spec)
+    _assert_exactly_once(res, spec.workload.num_requests)
+    sc = res.scaling_summary()
+    assert sc["n_scale_down"] >= 1
+    assert any(e.action == "down_retired" for e in res.scale_events)
+    drains = {e.worker: e.time for e in res.scale_events
+              if e.action == "down_drain"}
+    for e in res.scale_events:
+        if e.action == "down_retired":
+            assert e.time >= drains[e.worker]
+
+
+def test_fleet_respects_bounds_and_cooldown():
+    spec = _spec("threshold", n_workers=1, qps=40.0, n_req=150,
+                 cooldown=3.0, queue_high=1.0)
+    res = simulate(spec)
+    sc = res.scaling_summary()
+    assert 1 <= sc["fleet_size_min"] <= sc["fleet_size_max"] <= 4
+    actions = sorted(e.time for e in res.scale_events
+                     if e.action in ("up_request", "down_drain"))
+    for a, b in zip(actions, actions[1:]):
+        assert b - a >= 3.0 - 1e-9, \
+            f"cooldown violated: actions at {a} and {b}"
+
+
+def test_fleet_size_series_matches_events():
+    spec = _spec("threshold", n_workers=1, qps=40.0, n_req=120,
+                 queue_high=1.0)
+    res = simulate(spec)
+    sc = res.scaling_summary()
+    series = sc["fleet_size_series"]
+    assert series and series[0][1] >= 1
+    assert all(t2 >= t1 for (t1, _), (t2, _) in zip(series, series[1:]))
+    assert sc["fleet_size_final"] == series[-1][1]
+    # time-weighted average consistent with worker_seconds
+    assert sc["fleet_size_avg"] == pytest.approx(
+        sc["worker_seconds"] / res.sim_time)
+
+
+def test_validation_errors():
+    for bad in (dict(policy="bogus"),
+                dict(min_replicas=3, max_replicas=2),
+                dict(min_replicas=0),
+                dict(interval=0.0),
+                dict(scale_step=0)):
+        with pytest.raises(ValueError):
+            AutoscaleSpec(**bad).validate()
+    # surfaced through simulate() too
+    with pytest.raises(ValueError):
+        simulate(_spec("nope"))
+
+
+# ---------------------------------------------------------------------------
+# billing: time-weighted pricing (satellite: explore.spec_price tests)
+# ---------------------------------------------------------------------------
+def test_uptime_weighted_price_static_equals_spec_price():
+    spec = SimSpec(
+        workers=[WorkerSpec(hw="A100"), WorkerSpec(hw="L4")],
+        workload=WorkloadSpec(num_requests=20, qps=10.0, seed=1))
+    res = simulate(spec)
+    assert uptime_weighted_price(spec, res) == \
+        pytest.approx(spec_price(spec))
+
+
+def test_uptime_weighted_price_half_span_bills_half():
+    """A worker alive for half the horizon bills half its rate."""
+    spec = SimSpec(workers=[WorkerSpec(hw="A100")])
+    res = Results(requests=[], sim_time=10.0,
+                  worker_spans={0: (0.0, None), 1: (0.0, 5.0)},
+                  worker_prices={0: 1.0, 1: 1.0})
+    assert uptime_weighted_price(spec, res) == pytest.approx(1.5)
+    sc = res.scaling_summary()
+    assert sc["billed_cost"] == pytest.approx(15.0)
+    assert sc["worker_seconds"] == pytest.approx(15.0)
+    assert sc["fleet_size_avg"] == pytest.approx(1.5)
+
+
+def test_uptime_weighted_price_falls_back_without_spans():
+    spec = SimSpec(workers=[WorkerSpec(hw="A100")] * 3)
+    res = Results(requests=[], sim_time=10.0)
+    assert uptime_weighted_price(spec, res) == \
+        pytest.approx(spec_price(spec))
+    assert uptime_weighted_price(spec, None) == \
+        pytest.approx(spec_price(spec))
+
+
+def test_autoscaled_run_bills_less_than_peak_fleet():
+    """Billing integrates the actual fleet-size curve: an autoscaled
+    run that only briefly touches max_replicas bills strictly less
+    than a static max-size fleet over the same horizon."""
+    spec = _spec("threshold", n_workers=1, qps=40.0, n_req=150,
+                 queue_high=1.0)
+    res = simulate(spec)
+    sc = res.scaling_summary()
+    assert sc["fleet_size_max"] >= 2, "test needs an actual scale-up"
+    rate = uptime_weighted_price(spec, res)
+    assert rate < sc["fleet_size_max"] * max(
+        res.worker_prices.values())
+    assert sc["billed_cost"] == pytest.approx(rate * res.sim_time)
+
+
+def test_phase_cost_split_sums_to_billed_cost():
+    """prefill + decode cost allocation re-composes the billed cost of
+    every worker that did any work (idle-only workers excluded)."""
+    spec = _spec("threshold", n_workers=2, qps=30.0, n_req=100)
+    res = simulate(spec)
+    sc = res.scaling_summary()
+    p = sc["cost_per_1m_prefill_tokens"]
+    d = sc["cost_per_1m_decode_tokens"]
+    assert p > 0 and d > 0
+    ph = res.phase_stats
+    active_cost = 0.0
+    for wid, stats in ph.items():
+        if stats["busy_time"] <= 0:
+            continue
+        s, e = res.worker_spans[wid]
+        span = (e if e is not None else res.sim_time) - s
+        active_cost += res.worker_prices[wid] * span
+    split_total = (p * sum(x["prefill_tokens"] for x in ph.values())
+                   + d * sum(x["decode_tokens"] for x in ph.values()))
+    assert split_total / 1e6 == pytest.approx(active_cost, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# availability accounting regression (satellite: time-varying fleet)
+# ---------------------------------------------------------------------------
+def test_availability_capacity_uses_provisioned_span():
+    """A 1s outage is charged against provisioned worker-seconds, not
+    n_workers * sim_time: with worker 1 provisioned for only half the
+    run, capacity availability is 1 - 1/15, not 1 - 1/20."""
+    ev = [FaultEvent(time=2.0, worker=0, kind="fail"),
+          FaultEvent(time=3.0, worker=0, kind="recover")]
+    res = Results(requests=[], sim_time=10.0, n_workers=2,
+                  fault_events=ev,
+                  worker_spans={0: (0.0, None), 1: (5.0, None)})
+    av = res.availability_summary()
+    assert av["capacity_availability"] == pytest.approx(1 - 1 / 15)
+    legacy = Results(requests=[], sim_time=10.0, n_workers=2,
+                     fault_events=ev)
+    assert legacy.availability_summary()["capacity_availability"] \
+        == pytest.approx(1 - 1 / 20)
+
+
+def test_availability_absent_span_is_service_downtime():
+    """Before a scale-up lands (and after retirement) a replica is
+    absent: a single-worker fleet provisioned for [0, 5) of a 10s run
+    leaves the service down for the other 5s — but absent time is NOT
+    charged as per-worker failure downtime."""
+    res = Results(requests=[], sim_time=10.0, n_workers=1,
+                  fault_events=[],
+                  worker_spans={0: (0.0, 5.0)})
+    av = res.availability_summary()
+    assert av["service_downtime_s"] == pytest.approx(5.0)
+    assert av["availability_per_worker"][0] == pytest.approx(1.0)
+    assert av["capacity_availability"] == pytest.approx(1.0)
+
+
+def test_availability_static_fleet_identical_to_legacy():
+    """Simulated static fleets carry worker_spans now; the numbers must
+    match the historical fixed-n_workers accounting exactly."""
+    spec = SimSpec(
+        workers=[WorkerSpec(gpu_mem_util=0.3)] * 2,
+        workload=WorkloadSpec(num_requests=50, qps=20.0, seed=4),
+        faults=[FaultSpec(time=1.0, worker=0, kind="fail",
+                          duration=1.0)],
+        chaos=ChaosSpec(reload_time=0.2))
+    res = simulate(spec)
+    assert res.worker_spans == {0: (0.0, None), 1: (0.0, None)}
+    with_spans = res.availability_summary()
+    res.worker_spans = None
+    legacy = res.availability_summary()
+    for k in ("service_availability", "capacity_availability",
+              "service_downtime_s", "mtbf_observed_s"):
+        assert with_spans[k] == pytest.approx(legacy[k]), k
+
+
+# ---------------------------------------------------------------------------
+# full diurnal economics (slow: mirrors benchmarks/autoscale.py --quick)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_diurnal_autoscale_cheaper_than_static_peak():
+    """End-to-end economics at reduced scale: on a diurnal workload an
+    adaptive fleet bills fewer worker-seconds than the static fleet
+    sized for its own observed peak, while finishing everything."""
+    import benchmarks  # noqa: F401 - ensure package importable
+    from benchmarks.autoscale import _autoscale, _workload
+    n_req = 3000
+    wl = _workload(n_req)
+    adaptive = SimSpec(
+        arch="llama2-7b", workers=[WorkerSpec(hw="A100")],
+        global_policy="least_loaded", workload=wl,
+        retain_requests=False, streaming_slo=(5.0, 0.5),
+        autoscale=_autoscale("threshold", n_req))
+    res = simulate(adaptive)
+    sc = res.scaling_summary()
+    assert res.stats.n_finished == n_req
+    peak = sc["fleet_size_max"]
+    assert peak >= 2, "diurnal peak never triggered a scale-up"
+    static = SimSpec(
+        arch="llama2-7b",
+        workers=[WorkerSpec(hw="A100")] * peak,
+        global_policy="least_loaded", workload=wl,
+        retain_requests=False, streaming_slo=(5.0, 0.5))
+    res_s = simulate(static)
+    sc_s = res_s.scaling_summary()
+    assert sc["billed_cost"] < sc_s["billed_cost"], \
+        (sc["billed_cost"], sc_s["billed_cost"])
