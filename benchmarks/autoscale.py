@@ -28,7 +28,6 @@ no autoscaler at all).
 """
 from __future__ import annotations
 
-import math
 import os
 import sys
 

@@ -2,8 +2,6 @@
 from __future__ import annotations
 
 import csv
-import io
-import json
 import os
 import time
 from typing import Dict, List

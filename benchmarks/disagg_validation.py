@@ -9,13 +9,11 @@ A100s (64-in/64-out fixed requests)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.core.comm import LinkSpec
 from repro.core.costmodel.operators import kv_bytes_per_token
 from repro.core.mem.block_manager import BlockManager, MemoryConfig
-from repro.core.metrics import Results
 from repro.core.simulator import SimSpec, Simulation, WorkerSpec
 from repro.core.workload import WorkloadSpec, generate
 from repro.models import model_zoo as zoo

@@ -33,7 +33,7 @@ from repro.core.comm import p2p_time
 from repro.core.costmodel.backends import PipelineBackend
 from repro.core.costmodel.hardware import CLUSTERS, HARDWARE, ParallelSpec
 from repro.core.costmodel.operators import BatchMix
-from repro.core.simulator import SimSpec, Simulation, WorkerSpec, simulate
+from repro.core.simulator import SimSpec, WorkerSpec, simulate
 from repro.core.workload import WorkloadSpec
 from repro.explore import run_sweep, SweepSpec
 

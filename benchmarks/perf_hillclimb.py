@@ -18,8 +18,7 @@ import sys
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
-from benchmarks.roofline_report import (RESULTS, build_table,
-                                        cell_from_record, extrapolate)
+from benchmarks.roofline_report import RESULTS, build_table
 
 PERF_DIR = os.path.join(RESULTS, "dryrun_perf")
 BASE_DIR = os.path.join(RESULTS, "dryrun_probe")

@@ -1,0 +1,207 @@
+"""Cache-aware prefix-affinity routing study (docs/ROUTING.md): the
+cluster-level TTFT win from routing shared-system-prompt traffic at the
+worker already holding the prefix KV, plus the remote-KV-tier fetch
+path that replaces re-prefill when the transfer undercuts compute.
+
+The sweep crosses share length x global policy x fleet size at equal
+offered load.  A prefix-blind policy (``round_robin``) spreads each
+prefix group over every worker, so concurrent same-prefix requests
+rarely overlap on a host and each landing re-prefills the system
+prompt; ``prefix_affinity`` concentrates a group on its cache-holding
+worker (load-aware: it diverts off an overloaded holder and prices a
+peer/remote KV fetch against re-prefill compute), so the shared tokens
+are prefilled once and then hit.
+
+``--smoke`` runs the CI gates instead (scripts/ci.sh):
+
+* **ttft-win** — at equal load, ``prefix_affinity`` must strictly beat
+  prefix-blind ``round_robin`` on P50 TTFT for a shared-prefix
+  workload (the paper-level claim of this study);
+* **wrapper-noop** — on a workload with *no* shared prefixes,
+  ``prefix_affinity(inner=round_robin)`` must be byte-identical to
+  plain ``round_robin`` (the policy adds zero perturbation when it has
+  nothing to do; the seed-level disabled path is pinned by the golden
+  pins in tests/golden/);
+* **fault-no-loss** — killing the cache-holding worker mid-run must
+  invalidate its registry claims and lose no requests;
+* **fetch-attribution** — with attribution on, fetch time must appear
+  as its own component and every request's decomposition must still
+  sum to its measured latency (conservation to 1e-6).
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.core.faults import FaultSpec
+from repro.core.mem.remote_store import RemoteKVSpec
+from repro.core.metrics import percentile
+from repro.core.simulator import SimSpec, WorkerSpec, simulate
+from repro.core.workload import WorkloadSpec
+from repro.obs import ObsSpec
+
+from benchmarks.common import Bench, fmt
+
+#: sweep axes: shared-prefix length (tokens), fleet size
+SHARES = (0, 128, 512)
+FLEETS = (2, 4)
+QUICK_SHARES = (0, 512)
+QUICK_FLEETS = (4,)
+
+#: policies compared at equal load; the prefix-blind baselines run
+#: without the remote tier (fully routing-unaware)
+POLICIES = ("round_robin", "least_loaded", "prefix_affinity")
+
+
+def _wl(share_len: int, *, n: int = 160, qps: float = 30.0,
+        groups: int = 8, seed: int = 5) -> WorkloadSpec:
+    return WorkloadSpec(num_requests=n, qps=qps, seed=seed,
+                        lengths="fixed", prompt_len=64, output_len=64,
+                        shared_prefix_len=share_len,
+                        shared_prefix_groups=groups)
+
+
+def _spec(policy: str, n_workers: int, wl: WorkloadSpec, *,
+          remote: bool = False, faults=(), obs=None,
+          policy_kw=None) -> SimSpec:
+    return SimSpec(
+        arch="llama2-7b",
+        workers=[WorkerSpec(hw="A100", gpu_mem_util=0.3)
+                 for _ in range(n_workers)],
+        workload=wl, prefix_sharing=True, global_policy=policy,
+        global_policy_kw=policy_kw or {},
+        remote_kv=RemoteKVSpec() if remote else None,
+        faults=faults, obs=obs)
+
+
+def _p50_ttft(res) -> float:
+    return percentile(res.ttfts(), 50)
+
+
+def run(quick: bool = False) -> dict:
+    """Driver entry point (benchmarks/run.py): the share x policy x
+    fleet sweep; returns {(policy, share, fleet): p50_ttft} and asserts
+    the headline win at the sweep's largest shared prefix."""
+    b = Bench("prefix_routing")
+    shares = QUICK_SHARES if quick else SHARES
+    fleets = QUICK_FLEETS if quick else FLEETS
+    grid = {}
+    for fleet in fleets:
+        for share in shares:
+            wl = _wl(share)
+            for policy in POLICIES:
+                res = simulate(_spec(policy, fleet, wl,
+                                     remote=policy == "prefix_affinity"))
+                ro = res.routing_summary()
+                p50 = _p50_ttft(res)
+                grid[(policy, share, fleet)] = p50
+                b.add(policy=policy, share_len=share, fleet=fleet,
+                      p50_ttft=fmt(p50, 5),
+                      p99_ttft=fmt(percentile(res.ttfts(), 99), 5),
+                      throughput=fmt(res.throughput()),
+                      hit_rate=fmt(ro["affinity_hit_rate"], 3),
+                      fetches=ro["fetches"],
+                      fetch_time_s=fmt(ro["fetch_time_s"], 5))
+            base = grid[("round_robin", share, fleet)]
+            aff = grid[("prefix_affinity", share, fleet)]
+            print(f"fleet={fleet} share={share:4d}  p50 TTFT "
+                  f"rr={base:.4f}s affinity={aff:.4f}s  "
+                  f"({base / aff:.2f}x)")
+    share = max(shares)
+    for fleet in fleets:
+        base = grid[("round_robin", share, fleet)]
+        aff = grid[("prefix_affinity", share, fleet)]
+        assert aff < base, \
+            f"prefix_affinity lost at fleet={fleet}: {aff} >= {base}"
+    b.finish(derived=f"p50_ttft_win="
+                     f"{grid[('round_robin', share, fleets[-1])] / grid[('prefix_affinity', share, fleets[-1])]:.2f}x")
+    return {"grid": grid}
+
+
+# ---------------------------------------------------------------------------
+def smoke_ttft_win() -> None:
+    """prefix_affinity must strictly beat prefix-blind round_robin on
+    P50 TTFT at equal load, and must actually be routing on affinity
+    (not winning by accident)."""
+    wl = _wl(512)
+    base = simulate(_spec("round_robin", 4, wl))
+    aff = simulate(_spec("prefix_affinity", 4, wl, remote=True))
+    p_base, p_aff = _p50_ttft(base), _p50_ttft(aff)
+    ro = aff.routing_summary()
+    assert ro["affinity_hits"] > 0, "affinity never routed warm"
+    assert p_aff < p_base, \
+        f"no TTFT win: affinity {p_aff:.4f}s >= round_robin {p_base:.4f}s"
+    assert len(aff.finished) == len(base.finished), "finished count diverged"
+    print(f"ttft-win OK: p50 TTFT {p_base:.4f}s -> {p_aff:.4f}s "
+          f"({p_base / p_aff:.2f}x, hit_rate="
+          f"{ro['affinity_hit_rate']:.2f}, fetches={ro['fetches']})")
+
+
+def smoke_wrapper_noop() -> None:
+    """With no shared prefixes the wrapper must fall through to its
+    inner policy with byte-identical results."""
+    wl = _wl(0)
+    outs = []
+    for policy in ("round_robin", "prefix_affinity"):
+        kw = {"inner": "round_robin"} if policy == "prefix_affinity" \
+            else None
+        res = simulate(_spec(policy, 3, wl, policy_kw=kw))
+        outs.append([(r.id, r.t_first_token, r.t_finish)
+                     for r in res.requests])
+    assert outs[0] == outs[1], \
+        "prefix_affinity perturbed a no-shared-prefix workload"
+    print("wrapper-noop OK: 160 prefix-free requests byte-identical")
+
+
+def smoke_fault_no_loss() -> None:
+    """Kill a worker mid-run: its registry claims must die with it and
+    every request must still finish (re-routed, not lost)."""
+    wl = _wl(512, n=120, qps=20.0)
+    faults = (FaultSpec(time=2.0, worker=0, kind="fail", duration=3.0),)
+    res = simulate(_spec("prefix_affinity", 3, wl, remote=True,
+                         faults=faults))
+    ro = res.routing_summary()
+    assert len(res.finished) == 120, \
+        f"lost requests under failure: {len(res.finished)}/120"
+    assert ro["registry_invalidations"] > 0, \
+        "worker death did not invalidate its registry entries"
+    print(f"fault-no-loss OK: 120/120 finished, "
+          f"{ro['registry_invalidations']} registry entries invalidated")
+
+
+def smoke_fetch_attribution() -> None:
+    """Fetch time must be attributed as its own component and the
+    decomposition must stay conserved (sum == measured, 1e-6)."""
+    wl = _wl(512, n=100)
+    res = simulate(_spec("prefix_affinity", 4, wl, remote=True,
+                         obs=ObsSpec(attribution=True)))
+    assert res.routing_summary()["fetch_time_s"] > 0, \
+        "no fetches exercised: gate is vacuous"
+    bd = res.time_breakdown()
+    attributed = bd["ttft_mean"].get("fetch", 0.0) \
+        + bd["decode_mean"].get("fetch", 0.0)
+    assert attributed > 0, "fetch time missing from the breakdown"
+    worst = 0.0
+    for r in res.finished:
+        f = r.obs.final
+        worst = max(worst,
+                    abs(sum(f["ttft"].values()) - r.ttft),
+                    abs(sum(f["decode"].values())
+                        - (r.t_finish - r.t_first_token)))
+    assert worst < 1e-6, f"attribution no longer conserved: {worst}"
+    print(f"fetch-attribution OK: mean fetch {attributed * 1e3:.3f}ms, "
+          f"conservation residual {worst:.2e}")
+
+
+def main(argv) -> int:
+    if "--smoke" in argv:
+        smoke_ttft_win()
+        smoke_wrapper_noop()
+        smoke_fault_no_loss()
+        smoke_fetch_attribution()
+        return 0
+    run(quick="--quick" in argv)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -19,13 +19,12 @@ from __future__ import annotations
 
 import glob
 import json
-import math
 import os
 from dataclasses import dataclass
 from typing import Dict, Optional
 
-from repro.configs import get_config, get_shape, shape_applicable
-from repro.configs.base import DECODE, PREFILL, TRAIN
+from repro.configs import get_config, get_shape
+from repro.configs.base import DECODE, TRAIN
 from repro.core.costmodel.backends import cost_analysis_dict  # noqa: F401
 #    (re-exported: the calibration tests read it from this module)
 

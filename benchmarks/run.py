@@ -29,7 +29,7 @@ NON_BENCHMARKS = {"common", "run", "finalize_docs", "roofline_report",
 #: main(argv) handling "--smoke"
 SMOKE_GATED = {"sim_speed", "kv_hierarchy", "parallelism",
                "observability", "chaos_sweep", "hetero_fleet",
-               "autoscale"}
+               "autoscale", "prefix_routing"}
 
 
 def discover_modules() -> set:
@@ -86,8 +86,8 @@ def main(argv=None):
                             hardware_sub, hetero_fleet, kv_hierarchy,
                             mem_footprint, memcache, memratio,
                             observability, parallelism, platform_sweep,
-                            sim_speed, spec_decode, tenant_qos,
-                            validation)
+                            prefix_routing, sim_speed, spec_decode,
+                            tenant_qos, validation)
 
     benches = [
         ("validation", lambda: validation.run(n_req=20 if q else 40)),
@@ -112,6 +112,7 @@ def main(argv=None):
         ("chaos_sweep", lambda: chaos_sweep.run(quick=q)),
         ("hetero_fleet", lambda: hetero_fleet.run(quick=q)),
         ("autoscale", lambda: autoscale.run(quick=q)),
+        ("prefix_routing", lambda: prefix_routing.run(quick=q)),
     ]
     errors = check_registry({name for name, _ in benches})
     for e in errors:

@@ -13,7 +13,6 @@ import math
 import jax
 
 from repro.configs import get_smoke_config
-from repro.core.costmodel.backends import TabularBackend
 from repro.core.mem.block_manager import BlockManager, MemoryConfig
 from repro.core.metrics import Results, percentile
 from repro.core.simulator import SimSpec, Simulation, WorkerSpec

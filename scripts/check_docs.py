@@ -35,7 +35,11 @@ Checks:
      (``SCALE_ACTIONS``) and ``Results.scaling_summary()`` field
      (``SCALING_SUMMARY_FIELDS``) appears as a code-span in
      docs/AUTOSCALING.md — new autoscaler surface without docs
-     fails CI.
+     fails CI,
+  10. the ``prefix_affinity`` policy and every
+     ``Results.routing_summary()`` field (``ROUTING_SUMMARY_FIELDS``)
+     appears as a code-span in docs/ROUTING.md — new cache-aware
+     routing surface without docs fails CI.
 
 Run:  python scripts/check_docs.py        (exits non-zero on failure)
 """
@@ -283,6 +287,28 @@ def check_autoscaling_docs() -> list:
     return errors
 
 
+def check_routing_docs() -> list:
+    """The prefix-affinity policy and every routing-summary field must
+    be documented as a `code span` in docs/ROUTING.md."""
+    from repro.core.metrics import ROUTING_SUMMARY_FIELDS
+
+    errors = []
+    path = os.path.join(ROOT, "docs", "ROUTING.md")
+    if not os.path.exists(path):
+        return ["docs/ROUTING.md: missing (cache-aware routing doc "
+                "coverage needs it)"]
+    with open(path) as f:
+        text = f.read()
+    groups = [("routing policy", ["prefix_affinity"]),
+              ("routing_summary field", ROUTING_SUMMARY_FIELDS)]
+    for what, names in groups:
+        for n in names:
+            if f"`{n}`" not in text and f'`"{n}"`' not in text:
+                errors.append(f"{what} `{n}` not documented in "
+                              f"docs/ROUTING.md")
+    return errors
+
+
 def main() -> int:
     errors = []
     docs = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
@@ -299,6 +325,7 @@ def main() -> int:
     errors.extend(check_reliability_docs())
     errors.extend(check_heterogeneity_docs())
     errors.extend(check_autoscaling_docs())
+    errors.extend(check_routing_docs())
     for e in errors:
         print(f"docs-check FAIL: {e}")
     if not errors:
@@ -306,8 +333,8 @@ def main() -> int:
         print(f"docs-check OK: {n} markdown files, links + anchors resolve, "
               f"all benchmarks/examples have module docstrings, all "
               f"policies/workload kinds and memory/parallelism/"
-              f"observability/reliability/heterogeneity/autoscaling "
-              f"registries documented")
+              f"observability/reliability/heterogeneity/autoscaling/"
+              f"routing registries documented")
     return 1 if errors else 0
 
 

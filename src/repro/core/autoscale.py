@@ -36,7 +36,7 @@ part of the byte-identity contract (tests/test_autoscale.py).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from math import ceil, inf
 from typing import List, Optional
 

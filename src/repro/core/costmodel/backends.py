@@ -18,10 +18,8 @@
 """
 from __future__ import annotations
 
-import bisect
-import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core.comm import (LinkSpec, p2p_time, ring_allreduce_time,

@@ -44,6 +44,14 @@ class HardwareSpec:
     #: an autoscaler would pay.  Consumed only when ``SimSpec.chaos``
     #: is set; the legacy fault path keeps recovery free.
     reload_time: float = 30.0
+    #: remote KV tier link (docs/ROUTING.md): effective bytes/s this
+    #: host sees from the cluster object store (LMCache-class; a 50 GbE
+    #: NIC share by default).  Consumed only when ``SimSpec.remote_kv``
+    #: is set — per-tier retrieve cost = remote_setup + bytes/remote_bw.
+    remote_bw: float = 6.25e9
+    #: per-object remote-store round-trip setup latency, seconds
+    #: (metadata lookup + connection + first byte)
+    remote_setup: float = 2e-3
 
     def with_(self, **kw) -> "HardwareSpec":
         return replace(self, **kw)

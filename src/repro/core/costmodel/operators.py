@@ -20,7 +20,7 @@ so the simulator cannot drift from the runtime.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Callable, List, Optional, Tuple
+from typing import List, Tuple
 
 from repro.configs.base import (ArchConfig, AUDIO, DENSE, ENCDEC, HYBRID,
                                 MOE, SSM, VLM)

@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import json
 import random
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import List, Optional, Sequence
 
 from repro.distributed.fault import StragglerDetector
@@ -245,6 +245,13 @@ class FaultInjector:
             else False
         orphans = w.fail(kv_survives=kv)
         self._log(w.wid, "fail")
+        # cache-aware routing (docs/ROUTING.md): the dead worker's KV is
+        # gone, so its prefix-registry claims must die with it — stale
+        # entries would route requests at a cold (or still-down) worker.
+        # The remote object store deliberately survives: it is off-host.
+        reg = getattr(self.sim, "prefix_registry", None)
+        if reg is not None:
+            reg.invalidate_worker(w.wid)
         self.sim.redispatch(orphans, from_worker=w)
         return True
 

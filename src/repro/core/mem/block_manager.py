@@ -25,7 +25,7 @@ tests/test_kv_hierarchy.py):
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.mem.memory_pool import PrefixTrie

@@ -52,6 +52,23 @@ SCALING_SUMMARY_FIELDS = (
     "cost_per_1m_tokens", "cost_per_1m_prefill_tokens",
     "cost_per_1m_decode_tokens", "events")
 
+#: every key of ``Results.routing_summary()`` (cache-aware prefix
+#: routing + remote KV tier); scripts/check_docs.py asserts each is
+#: documented in docs/ROUTING.md
+ROUTING_SUMMARY_FIELDS = (
+    "prefix_requests", "fetches", "fetched_tokens",
+    "affinity_hits", "affinity_misses", "affinity_hit_rate",
+    "overload_diversions", "fetch_hints",
+    "peer_fetches", "remote_fetches", "fetch_bytes", "fetch_time_s",
+    "fetch_misses", "fetch_recomputes",
+    "registry_prefixes", "registry_entries", "registry_publishes",
+    "registry_invalidations", "registry_expirations",
+    "registry_evictions",
+    "remote_capacity_bytes", "remote_used_bytes",
+    "remote_peak_used_bytes", "remote_entries", "remote_stores",
+    "remote_hits", "remote_misses", "remote_evictions",
+    "remote_rejects")
+
 
 def _interp_percentile(s: Sequence[float], p: float) -> float:
     """Linear-interpolated percentile of an already-sorted sequence."""
@@ -241,6 +258,10 @@ class StreamingStats:
         self.swap_ins = 0
         self.shared_tokens = 0
         self.cow_copies = 0
+        # cache-aware routing counters (docs/ROUTING.md)
+        self.fetches = 0
+        self.fetched_tokens = 0
+        self.prefix_requests = 0
         #: latency-attribution sums (docs/OBSERVABILITY.md): per-
         #: component totals of the finalized TTFT / decode / per-token
         #: breakdowns, folded at retire time so drop-mode keeps the
@@ -285,6 +306,10 @@ class StreamingStats:
         self.swap_ins += req.swap_in_count
         self.shared_tokens += req.shared_tokens
         self.cow_copies += req.cow_copies
+        self.fetches += req.fetch_count
+        self.fetched_tokens += req.fetched_tokens
+        if req.prefix_id is not None:
+            self.prefix_requests += 1
         ro = getattr(req, "obs", None)
         if ro is not None and ro.final is not None:
             a = self.attrib
@@ -395,6 +420,13 @@ class Results:
     #: "decode_tokens", "busy_time"}: busy time split by phase, the
     #: basis of the prefill/decode $/1M-tokens split
     phase_stats: Optional[Dict[int, Dict[str, float]]] = None
+    #: cluster-wide cache-aware routing counters (docs/ROUTING.md):
+    #: Simulation.fetch_prefix fetch accounting merged with the
+    #: prefix_affinity policy's and PrefixRegistry's stats(); None when
+    #: neither prefix routing nor a remote KV tier was active
+    routing_stats: Optional[Dict[str, float]] = None
+    #: RemoteKVStore.stats() snapshot when SimSpec.remote_kv was set
+    remote_stats: Optional[Dict[str, float]] = None
     #: per-Results caches: finished list and sorted metric lists are
     #: computed once (the repeated-full-sort fix); safe because Results
     #: is read after the simulation has finished mutating requests
@@ -565,6 +597,56 @@ class Results:
                          for s in self.mem_stats.values())
             out["prefix_hit_rate"] = hits / (hits + misses) \
                 if hits + misses else 0.0
+        return out
+
+    # ---- cache-aware routing (docs/ROUTING.md) ------------------------
+    def routing_summary(self) -> Dict[str, float]:
+        """Cache-aware prefix-routing and remote-KV-tier accounting:
+        affinity hit rate at the global scheduler, cross-worker /
+        remote-tier KV fetch volume and pricing, registry churn, and
+        remote-store occupancy.  ``ROUTING_SUMMARY_FIELDS`` lists every
+        returned key.  Works in both exact and streaming modes —
+        per-request fetch counters are folded at retire time, cluster
+        counters come from ``routing_stats``/``remote_stats``."""
+        if self.stats is not None:
+            prefix_requests = self.stats.prefix_requests + sum(
+                1 for r in self.requests if r.prefix_id is not None)
+            fetches = self.stats.fetches + sum(
+                r.fetch_count for r in self.requests)
+            fetched_tokens = self.stats.fetched_tokens + sum(
+                r.fetched_tokens for r in self.requests)
+        else:
+            prefix_requests = sum(1 for r in self.requests
+                                  if r.prefix_id is not None)
+            fetches = sum(r.fetch_count for r in self.requests)
+            fetched_tokens = sum(r.fetched_tokens for r in self.requests)
+        out: Dict[str, float] = {
+            "prefix_requests": prefix_requests,
+            "fetches": fetches,
+            "fetched_tokens": fetched_tokens,
+        }
+        rs = self.routing_stats or {}
+        for k in ("affinity_hits", "affinity_misses",
+                  "overload_diversions", "fetch_hints",
+                  "peer_fetches", "remote_fetches", "fetch_bytes",
+                  "fetch_time_s", "fetch_misses", "fetch_recomputes",
+                  "registry_prefixes", "registry_entries",
+                  "registry_publishes", "registry_invalidations",
+                  "registry_expirations", "registry_evictions"):
+            out[k] = rs.get(k, 0)
+        routed = out["affinity_hits"] + out["affinity_misses"]
+        out["affinity_hit_rate"] = out["affinity_hits"] / routed \
+            if routed else 0.0
+        rem = self.remote_stats or {}
+        out["remote_capacity_bytes"] = rem.get("capacity_bytes", 0.0)
+        out["remote_used_bytes"] = rem.get("used_bytes", 0.0)
+        out["remote_peak_used_bytes"] = rem.get("peak_used_bytes", 0.0)
+        out["remote_entries"] = rem.get("n_entries", 0)
+        out["remote_stores"] = rem.get("stores", 0)
+        out["remote_hits"] = rem.get("hits", 0)
+        out["remote_misses"] = rem.get("misses", 0)
+        out["remote_evictions"] = rem.get("evictions", 0)
+        out["remote_rejects"] = rem.get("rejects", 0)
         return out
 
     # ---- parallelism (docs/PARALLELISM.md) ----------------------------

@@ -72,6 +72,15 @@ class Request:
     swap_out_count: int = 0              # preemptions taken in swap mode
     swap_in_count: int = 0               # host->device restores
 
+    # cache-aware routing (docs/ROUTING.md): the prefix_affinity router
+    # stamps a one-shot hint — "worker fetch_src holds fetch_tokens of
+    # your prefix" — that the target worker's admission consumes via
+    # Simulation.fetch_prefix; the counters record consummated fetches
+    fetch_src: Optional[int] = field(default=None, repr=False)
+    fetch_tokens: int = field(default=0, repr=False)
+    fetch_count: int = 0                 # peer/remote KV fetches taken
+    fetched_tokens: int = 0              # prefix tokens obtained by fetch
+
     #: latency-attribution banks (repro.obs.attribution.RequestObs),
     #: attached lazily by the observability layer when
     #: SimSpec(obs=ObsSpec(attribution=True)); None otherwise

@@ -7,7 +7,7 @@ and memory state — "all system information") and may keep their own state
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.core.request import Request
 
@@ -279,6 +279,101 @@ class ModelRouted(GlobalScheduler):
             hook(req)
 
 
+class PrefixAffinity(GlobalScheduler):
+    """Cache-aware routing (docs/ROUTING.md): send a request to the
+    worker already holding its longest shared prefix, llm-d style.
+
+    Consults a cluster-wide :class:`~repro.core.sched.prefix_registry.
+    PrefixRegistry` (attached by the ``Simulation``, which also ages and
+    invalidates entries so the router never assumes immortal cache).
+    Requests without a ``prefix_id`` — and prefixes nobody holds — fall
+    through to the inner policy untouched; among equally-warm holders
+    the inner policy breaks the tie, so ``least_loaded`` inside gives a
+    load-aware tiebreak for free.  When every warm worker is overloaded
+    (``overload_factor`` x the lightest eligible worker), the request
+    routes by the inner policy instead and — if ``fetch_on_overload`` —
+    carries a fetch hint so the target worker pulls the prefix from the
+    warm peer over the ``SimSpec.kv_link`` rather than re-prefilling
+    (the cross-worker KV transfer, priced by ``Simulation.
+    fetch_prefix`` with a fetch-vs-recompute break-even).
+
+    Wrappable like ``model_routed`` and composes with it in either
+    direction: ``inner`` is a policy name or instance."""
+
+    def __init__(self, inner="least_loaded", *, registry=None,
+                 registry_ttl: float = 30.0, overload_factor: float = 3.0,
+                 fetch_on_overload: bool = True, **inner_kw):
+        if isinstance(inner, str):
+            inner = make_global_scheduler(inner, **inner_kw)
+        elif inner_kw:
+            raise ValueError("inner_kw only applies when inner is a name")
+        self.inner = inner
+        self.registry = registry        # attached by the Simulation
+        self.registry_ttl = registry_ttl
+        self.overload_factor = overload_factor
+        self.fetch_on_overload = fetch_on_overload
+        self.affinity_hits = 0          # routed to a warm holder
+        self.affinity_misses = 0        # no fresh holder: inner decided
+        self.overload_diversions = 0    # warm but too hot: inner decided
+        self.fetch_hints = 0            # diversions stamped with a hint
+
+    def assign(self, req, workers):
+        reg = self.registry
+        pid = getattr(req, "prefix_id", None)
+        if reg is None or pid is None or req.prefix_len <= 0:
+            return self.inner.assign(req, workers)
+        held = reg.holders(pid)
+        ws = _eligible(workers, prefill=True)
+        warm = [w for w in ws if held.get(w.wid, 0) > 0]
+        if not warm:
+            self.affinity_misses += 1
+            wid = self.inner.assign(req, workers)
+            reg.publish(pid, wid, req.prefix_len)
+            return wid
+        best = max(held[w.wid] for w in warm)
+        warm = [w for w in warm if held[w.wid] == best]
+        light = min(w.load_tokens() for w in ws)
+        warm_load = min(w.load_tokens() for w in warm)
+        if warm_load > self.overload_factor * max(light, 1.0):
+            # every warm holder is hot: dispatch by load, but tell the
+            # target where the prefix lives so it can fetch, not recompute
+            self.overload_diversions += 1
+            wid = self.inner.assign(req, workers)
+            if self.fetch_on_overload and wid not in held:
+                src = min((w for w in warm), key=lambda w:
+                          (w.load_tokens(), w.wid))
+                req.fetch_src = src.wid
+                req.fetch_tokens = min(best, req.prefix_len)
+                self.fetch_hints += 1
+            reg.publish(pid, wid, req.prefix_len)
+            return wid
+        self.affinity_hits += 1
+        wid = self.inner.assign(req, warm)
+        reg.touch(pid, wid)
+        reg.publish(pid, wid, req.prefix_len)
+        return wid
+
+    def eligible_for(self, req, workers):
+        return self.inner.eligible_for(req, workers)
+
+    def reassign(self, req, workers):
+        return self.inner.reassign(req, workers)
+
+    def discipline(self):
+        return self.inner.discipline()
+
+    def on_service_start(self, req) -> None:
+        hook = getattr(self.inner, "on_service_start", None)
+        if hook is not None:
+            hook(req)
+
+    def stats(self) -> Dict[str, int]:
+        return {"affinity_hits": self.affinity_hits,
+                "affinity_misses": self.affinity_misses,
+                "overload_diversions": self.overload_diversions,
+                "fetch_hints": self.fetch_hints}
+
+
 def _hetero_routed(**kw):
     """The ``hetero`` policy upgraded for multi-model fleets: model
     routing wrapped around the FLOPs/bandwidth-weighted chooser.  For a
@@ -295,7 +390,8 @@ GLOBAL_POLICIES = {"round_robin": RoundRobin, "least_loaded": LeastLoaded,
                    "hetero": _hetero_routed,
                    "heterogeneity_aware": _hetero_routed,
                    "wfq": WeightedFairQueuing, "priority": PriorityAging,
-                   "model_routed": ModelRouted}
+                   "model_routed": ModelRouted,
+                   "prefix_affinity": PrefixAffinity}
 
 
 def make_global_scheduler(kind: str, **kw) -> GlobalScheduler:

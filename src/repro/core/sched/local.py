@@ -30,6 +30,9 @@ class IterationPlan:
     #: PCIe time of this iteration's KV swap-outs/-ins (docs/MEMORY.md);
     #: billed serially into the iteration by the worker
     swap_latency: float = 0.0
+    #: cross-worker / remote-tier prefix-KV fetch time this iteration
+    #: (docs/ROUTING.md); billed serially like swap_latency
+    fetch_latency: float = 0.0
     #: pipeline-parallel accounting (docs/PARALLELISM.md), filled by the
     #: worker after costing: fill/drain bubble time and stage-boundary
     #: p2p activation-transfer time of this iteration
@@ -198,6 +201,15 @@ class ContinuousBatching(LocalScheduler):
                 plan.swap_latency += swap.swap_in(req)
                 req.swap_in_count += 1
                 req.swapped_tokens = 0
+            elif req.fetch_src is not None:
+                # cache-aware routing stamped a fetch hint (docs/
+                # ROUTING.md): pull the shared prefix from the peer (or
+                # the remote tier) instead of re-prefilling; the cluster
+                # prices it and may decline at the break-even point
+                cluster = getattr(worker, "cluster", None)
+                if cluster is not None:
+                    plan.fetch_latency += cluster.fetch_prefix(worker, req)
+                req.fetch_src = None
             plan.admitted.append(req)
 
         # MIGRATING requests' KV is in flight to another worker: they

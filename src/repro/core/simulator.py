@@ -45,7 +45,7 @@ SLO-attainment / goodput breakdowns and Jain's fairness index.
 from __future__ import annotations
 
 import time as _time
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Union
 
 from repro.configs import get_config
@@ -65,12 +65,14 @@ from repro.core.faults import (ChaosSpec, FaultEvent, FaultInjector,
                                FaultProcess, FaultSpec, load_fault_trace)
 from repro.core.mem.block_manager import MemoryConfig
 from repro.core.mem.memory_pool import MemoryPool, PoolConfig
+from repro.core.mem.remote_store import RemoteKVSpec, RemoteKVStore
 from repro.core.mem.swap import PREEMPTION_MODES, SwapConfig, SwapManager
 from repro.core.metrics import Results, StreamingStats
 from repro.core.request import Request, State
-from repro.core.sched.global_sched import (GlobalScheduler,
+from repro.core.sched.global_sched import (GlobalScheduler, PrefixAffinity,
                                            make_global_scheduler)
 from repro.core.sched.local import make_local_scheduler
+from repro.core.sched.prefix_registry import PrefixRegistry
 from repro.core.specdecode import SpecDecodeSpec
 from repro.core.tenancy import AdmissionController, TenantSpec
 from repro.core.worker import Worker
@@ -138,6 +140,14 @@ class SimSpec:
     #: host DRAM bytes available for swapped KV; None = the worker
     #: hardware's ``HardwareSpec.host_mem_cap``
     host_mem_cap: Optional[float] = None
+    #: third cache tier (docs/ROUTING.md): a cluster-wide capacity-
+    #: bounded remote/object KV store under host DRAM.  Prefill
+    #: hand-offs publish shared prefixes into it, the swap tier spills
+    #: victims when host DRAM fills, and workers fetch at
+    #: ``remote_setup + bytes / remote_bw`` (per-worker HardwareSpec
+    #: fields, overridable on the spec).  None — the default — is
+    #: byte-identical to the two-tier model
+    remote_kv: Optional[RemoteKVSpec] = None
     #: parallelism strategy applied to every worker (docs/PARALLELISM.md):
     #: tensor degree (per-worker ``WorkerSpec.tp`` != 1 still wins),
     #: pipeline stages with micro-batched iterations, and data-parallel
@@ -265,6 +275,34 @@ class Simulation:
             if spec.obs is not None and spec.obs.enabled else None
         self.global_sched: GlobalScheduler = make_global_scheduler(
             spec.global_policy, **spec.global_policy_kw)
+        #: cache-aware routing (docs/ROUTING.md): attach a cluster-wide
+        #: prefix registry to any PrefixAffinity router in the policy
+        #: chain (wrappers expose ``.inner``, fallbacks ``.fallback``);
+        #: both stay None for prefix-blind policies — zero extra state
+        self.prefix_registry: Optional[PrefixRegistry] = None
+        self._prefix_router: Optional[PrefixAffinity] = None
+        node = self.global_sched
+        while node is not None:
+            if isinstance(node, PrefixAffinity):
+                if node.registry is None:
+                    node.registry = PrefixRegistry(
+                        self.env, ttl=node.registry_ttl)
+                self.prefix_registry = node.registry
+                self._prefix_router = node
+                break
+            node = getattr(node, "inner", None) \
+                or getattr(node, "fallback", None)
+        #: remote/object KV tier shared by the whole cluster
+        #: (docs/ROUTING.md); built before the workers so their swap
+        #: managers can spill into it
+        self.remote_store: Optional[RemoteKVStore] = \
+            RemoteKVStore(spec.remote_kv.capacity_bytes) \
+            if spec.remote_kv is not None else None
+        #: cluster-level fetch counters (Results.routing_summary)
+        self.fetch_stats: Dict[str, float] = {
+            "fetches": 0, "peer_fetches": 0, "remote_fetches": 0,
+            "fetch_bytes": 0.0, "fetch_time_s": 0.0,
+            "fetch_misses": 0, "fetch_recomputes": 0}
         self.admission: Optional[AdmissionController] = \
             AdmissionController(self.env, spec.tenants, self) \
             if spec.tenants else None
@@ -376,13 +414,16 @@ class Simulation:
             prefix_sharing=spec.prefix_sharing)
         swap = None
         if spec.preemption_mode == "swap":
+            rbw, rsetup = self._remote_cost(hw)
             swap = SwapManager(SwapConfig(
                 pcie_bw=hw.pcie_bw,
                 host_capacity_bytes=spec.host_mem_cap
                 if spec.host_mem_cap is not None else hw.host_mem_cap,
                 kv_bytes_per_token=mem_cfg.kv_bytes_per_token,
                 state_bytes_per_seq=mem_cfg.state_bytes_per_seq,
-                block_size=mem_cfg.block_size))
+                block_size=mem_cfg.block_size,
+                remote_bw=rbw, remote_setup_latency=rsetup),
+                remote=self.remote_store)
         if spec.backends_by_worker and base_i in spec.backends_by_worker:
             backend = spec.backends_by_worker[base_i]
         elif spec.backend == "tabular":
@@ -481,9 +522,92 @@ class Simulation:
 
     # ------------------------------------------------------------------
     # cluster callbacks (used by workers/hooks)
+    def _remote_cost(self, hw: HardwareSpec) -> tuple:
+        """(bw, setup) the remote tier charges this hardware
+        (docs/ROUTING.md): spec-level overrides win over the per-worker
+        HardwareSpec fields."""
+        rk = self.spec.remote_kv
+        if rk is None:
+            return hw.remote_bw, hw.remote_setup
+        return (rk.bw if rk.bw is not None else hw.remote_bw,
+                rk.setup_latency if rk.setup_latency is not None
+                else hw.remote_setup)
+
+    def fetch_prefix(self, worker: Worker, req: Request) -> float:
+        """Price pulling ``req``'s shared prefix from the peer named by
+        its fetch hint — a ``p2p_time`` transfer over ``SimSpec.
+        kv_link`` — or from the remote tier when the peer is gone
+        (docs/ROUTING.md).  Applies a fetch-vs-recompute break-even
+        mirroring the swap crossover: when re-prefilling the missing
+        tokens is cheaper than the wire, the fetch is declined and the
+        request prefills as routed.  Returns the latency to bill into
+        ``IterationPlan.fetch_latency`` (0.0 when nothing fetched)."""
+        want = req.fetch_tokens
+        have = max(req.cached_len, req.prefill_done_len)
+        if want <= have:
+            return 0.0                      # local cache already covers it
+        st = self.fetch_stats
+        kvt, sbs = self._kv_by_model[req.model or self.default_model]
+        cost = via = None
+        tokens = want
+        src_wid = req.fetch_src
+        if src_wid is not None and 0 <= src_wid < len(self.workers):
+            src = self.workers[src_wid]
+            if src.alive and not src.retired and src is not worker:
+                nbytes = (kvt * tokens) if kvt else sbs
+                cost = comm_mod.p2p_time(nbytes, self.spec.kv_link)
+                via = "peer"
+        if cost is None and self.remote_store is not None \
+                and req.prefix_id is not None:
+            hit = self.remote_store.get(("prefix", req.prefix_id))
+            if hit is not None and min(want, hit[0]) > have:
+                tokens = min(want, hit[0])
+                nbytes = (kvt * tokens) if kvt else sbs
+                rbw, rsetup = self._remote_cost(worker.hw)
+                cost = rsetup + nbytes / max(rbw, 1.0)
+                via = "remote"
+        if cost is None:
+            st["fetch_misses"] += 1         # peer dead, remote cold
+            return 0.0
+        if cost >= worker.estimate_prefill_time(tokens - have):
+            st["fetch_recomputes"] += 1     # recompute wins the break-even
+            return 0.0
+        req.cached_len = max(req.cached_len, tokens)
+        req.fetch_count += 1
+        req.fetched_tokens += tokens - have
+        st["fetches"] += 1
+        st["peer_fetches" if via == "peer" else "remote_fetches"] += 1
+        st["fetch_bytes"] += nbytes
+        st["fetch_time_s"] += cost
+        if via == "peer":
+            if self.prefix_registry is not None \
+                    and req.prefix_id is not None:
+                self.prefix_registry.touch(req.prefix_id, src_wid)
+            if self.remote_store is not None and req.prefix_id is not None \
+                    and self.spec.remote_kv.publish_prefixes:
+                # write-through: a prefix worth moving between peers is
+                # worth making cluster-visible
+                self.remote_store.put(("prefix", req.prefix_id),
+                                      tokens, nbytes)
+        if self.obs is not None:
+            self.obs.on_fetch(worker.wid, req, via, tokens, nbytes,
+                              self.env.now)
+        return cost
+
     def migrate(self, req: Request, from_worker: Worker) -> None:
         """Move a prefilled request to a decode worker (KV over the link)."""
         target_id = self.global_sched.reassign(req, self.workers)
+        if self.remote_store is not None and req.prefix_id is not None \
+                and req.prefix_len > 0 \
+                and self.spec.remote_kv.publish_prefixes:
+            # disagg publish (docs/ROUTING.md): the prefill worker has
+            # the shared prefix computed at hand-off time; pushing it to
+            # the object store is an async write-back off the serving
+            # path, so no latency is billed here
+            pkvt, psbs = self._kv_by_model[req.model or self.default_model]
+            ptok = min(req.prefix_len, req.context_len)
+            self.remote_store.put(("prefix", req.prefix_id), ptok,
+                                  (pkvt * ptok) if pkvt else psbs)
         if target_id == from_worker.wid:
             return                          # stays: nothing to move
         req.state = State.MIGRATING
@@ -575,6 +699,16 @@ class Simulation:
         if self.obs is not None:
             self.global_sched.observe_assign(req, wid)
         target = self.workers[wid]
+        if self.remote_store is not None and req.fetch_src is None \
+                and req.prefix_id is not None and req.prefix_len > 0 \
+                and self.remote_store.has(("prefix", req.prefix_id)):
+            # the cluster store holds this prefix (published by a disagg
+            # prefill hand-off or a peer-fetch write-through): hint the
+            # target to fetch instead of re-prefilling.  fetch_src=-1
+            # means "no peer, remote tier only"; the local-cache check
+            # and the break-even in fetch_prefix still apply
+            req.fetch_src = -1
+            req.fetch_tokens = req.prefix_len
         if src_swap is not None and src_swap.holds(req):
             tokens = src_swap.drop(req)
             tswap = target.swap
@@ -721,8 +855,22 @@ class Simulation:
                         "decode_tokens": w.decode_tokens,
                         "busy_time": w.busy_time}
                 for w in self.workers},
+            routing_stats=self._routing_stats(),
+            remote_stats=self.remote_store.stats()
+            if self.remote_store is not None else None,
             trace=self.obs.trace if self.obs is not None else None,
             timeseries=self.obs.ts if self.obs is not None else None)
+
+    def _routing_stats(self) -> Optional[dict]:
+        """Cluster-level cache-aware-routing counters (docs/ROUTING.md),
+        None unless a prefix router or remote tier is active."""
+        if self._prefix_router is None and self.remote_store is None:
+            return None
+        out = dict(self.fetch_stats)
+        if self._prefix_router is not None:
+            out.update(self._prefix_router.stats())
+            out.update(self.prefix_registry.stats())
+        return out
 
 
 def simulate(spec: SimSpec) -> Results:

@@ -17,11 +17,11 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Deque, Dict, Optional, Sequence
 
 from repro.core.engine import Environment, Event
 from repro.core.request import Request, State
-from repro.core.tenancy.spec import QUEUE, REJECT, SHED, TenantSpec
+from repro.core.tenancy.spec import REJECT, SHED, TenantSpec
 
 
 @dataclass

@@ -12,7 +12,7 @@ so ordering is consistent cluster-wide.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
 from repro.core.request import Request
 

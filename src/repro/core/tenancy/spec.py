@@ -13,7 +13,6 @@ streams into one deterministic arrival sequence.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
 
 from repro.core.workload import WorkloadSpec
 

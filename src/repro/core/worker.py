@@ -8,8 +8,8 @@ growth, finishes, preemptions) and fires breakpoints.
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Deque, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Deque, List, Optional
 
 from repro.core.breakpoints import Hooks
 from repro.core.costmodel.backends import CostBackend
@@ -20,7 +20,7 @@ from repro.core.mem.block_manager import BlockManager, MemoryConfig
 from repro.core.mem.memory_pool import MemoryPool
 from repro.core.mem.swap import SwapManager
 from repro.core.request import Request, State
-from repro.core.sched.local import IterationPlan, LocalScheduler
+from repro.core.sched.local import LocalScheduler
 from repro.obs.timeseries import BoundedSeries
 
 
@@ -298,7 +298,8 @@ class Worker:
                 self.pp_comm_time += comm * sd
                 self.pp_span_time += span * sd
             t = t_compute * self.slowdown \
-                + plan.retrieve_latency + plan.swap_latency
+                + plan.retrieve_latency + plan.swap_latency \
+                + plan.fetch_latency
             if plan.spec_decode:
                 plan.draft_latency = \
                     self._draft_time(plan.spec_decode) * self.slowdown
@@ -350,6 +351,16 @@ class Worker:
             self.hooks.fire("after_iteration", self, plan, t)
 
     # ------------------------------------------------------------------
+    def estimate_prefill_time(self, tokens: int) -> float:
+        """Analytic cost of prefilling ``tokens`` from scratch as one
+        chunk on this worker — the recompute side of the fetch-vs-
+        recompute break-even (docs/ROUTING.md), mirroring the swap
+        crossover's use of the cost model."""
+        if tokens <= 0:
+            return 0.0
+        mix = BatchMix.from_batch([(tokens, 0)], [])
+        return self.backend.iteration_time(mix) * self.slowdown
+
     def _draft_time(self, spec_reqs: List[Request]) -> float:
         """Cost of the draft model proposing K tokens: K sequential
         decode iterations of the draft backend over the speculative

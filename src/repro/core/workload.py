@@ -27,7 +27,7 @@ import json
 import math
 import random
 import zlib
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Iterator, List, Optional, Sequence
 
 from repro.core.request import Request

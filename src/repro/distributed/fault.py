@@ -17,9 +17,8 @@ tests/test_simulator.py.
 from __future__ import annotations
 
 import statistics
-import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, List
 
 
 @dataclass

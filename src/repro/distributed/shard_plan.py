@@ -21,7 +21,7 @@ cleanly — Megatron-style GQA replication, charged honestly in roofline.
 from __future__ import annotations
 
 import re
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

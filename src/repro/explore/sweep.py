@@ -177,6 +177,11 @@ def default_metrics(spec: SimSpec, res: Results) -> Dict:
     }
     if res.parallel_stats:
         row["bubble_fraction"] = res.parallel_summary()["bubble_fraction"]
+    if res.routing_stats is not None:
+        ro = res.routing_summary()
+        row["affinity_hit_rate"] = ro["affinity_hit_rate"]
+        row["kv_fetches"] = ro["fetches"]
+        row["kv_fetch_time_s"] = ro["fetch_time_s"]
     return row
 
 

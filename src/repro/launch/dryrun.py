@@ -27,7 +27,7 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import (ASSIGNED, get_config, get_shape,  # noqa: E402
                            LM_SHAPES, shape_applicable)
-from repro.configs.base import TRAIN, PREFILL, DECODE  # noqa: E402
+from repro.configs.base import TRAIN, PREFILL  # noqa: E402
 from repro.core.costmodel.backends import cost_analysis_dict  # noqa: E402
 from repro.distributed import shard_plan  # noqa: E402
 from repro.distributed.api import use_rules  # noqa: E402

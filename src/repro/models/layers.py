@@ -11,7 +11,6 @@ compute dtype at use (bf16 on TPU), the standard mixed-precision recipe.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,12 +20,11 @@ through the output path.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import _normal, norm_apply
+from repro.models.layers import _normal
 
 
 # ---------------------------------------------------------------------------

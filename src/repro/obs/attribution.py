@@ -33,7 +33,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 #: scripts/check_docs.py asserts each is documented in
 #: docs/OBSERVABILITY.md
 COMPONENTS = ("gateway", "queue", "prefill", "decode", "comm", "bubble",
-              "swap", "retrieve", "draft", "migrate", "stall")
+              "swap", "retrieve", "fetch", "draft", "migrate", "stall")
 
 
 class RequestObs:

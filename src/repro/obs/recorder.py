@@ -86,6 +86,7 @@ class ObsRecorder:
                          ("bubble", plan.pp_bubble),
                          ("swap", plan.swap_latency),
                          ("retrieve", plan.retrieve_latency),
+                         ("fetch", plan.fetch_latency),
                          ("draft", plan.draft_latency)):
             if val:
                 args[key] = val
@@ -134,6 +135,17 @@ class ObsRecorder:
             self.trace.instant(f"scale.{action}", now,
                                WORKER_PID_BASE + wid, {})
 
+    def on_fetch(self, wid: int, req, via: str, tokens: int,
+                 nbytes: float, now: float) -> None:
+        """Cross-worker / remote-tier KV fetch instant
+        (docs/ROUTING.md) on the fetching worker's trace lane:
+        ``fetch.peer`` / ``fetch.remote``."""
+        if self.trace is not None:
+            self.trace.instant(f"fetch.{via}", now,
+                               WORKER_PID_BASE + wid,
+                               {"req": req.id, "tokens": tokens,
+                                "bytes": nbytes})
+
     def on_migrate_done(self, req, now: float, dur: float) -> None:
         if self.trace is not None:
             self.trace.req_phase(req, "queue", now)
@@ -153,7 +165,8 @@ class ObsRecorder:
         token-light workloads — see benchmarks/sim_speed.py's
         ``run_obs_overhead`` gate)."""
         other = plan.comm_latency + plan.pp_bubble + plan.swap_latency \
-            + plan.retrieve_latency + plan.draft_latency
+            + plan.retrieve_latency + plan.fetch_latency \
+            + plan.draft_latency
         if not other:
             for req in plan.decode:
                 ro = req.obs
@@ -185,6 +198,7 @@ class ObsRecorder:
                          ("bubble", plan.pp_bubble),
                          ("swap", plan.swap_latency),
                          ("retrieve", plan.retrieve_latency),
+                         ("fetch", plan.fetch_latency),
                          ("draft", plan.draft_latency)):
             if val:
                 comps.append((key, val))

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -26,7 +26,7 @@ from repro.core.costmodel.operators import BatchMix
 from repro.core.mem.block_manager import BlockManager, MemoryConfig
 from repro.core.mem.memory_pool import MemoryPool
 from repro.core.request import Request, State
-from repro.core.sched.local import ContinuousBatching, make_local_scheduler
+from repro.core.sched.local import make_local_scheduler
 from repro.models import model_zoo as zoo
 from repro.serving import paged_model
 from repro.serving.sampling import sample_token

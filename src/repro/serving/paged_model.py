@@ -16,7 +16,7 @@ those (see DESIGN.md §Arch-applicability).
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

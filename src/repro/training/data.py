@@ -9,7 +9,7 @@ checkpointable cursor) is what a real loader would implement.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,21 +8,17 @@ activation memory flat.
 """
 from __future__ import annotations
 
-import functools
-import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import model_zoo as zoo
 from repro.training import grad_compress
 from repro.training.checkpoint import CheckpointManager
 from repro.training.data import DataConfig, DataPipeline
-from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update,
-                                      global_norm)
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
 
 
 @dataclass(frozen=True)

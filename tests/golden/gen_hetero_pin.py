@@ -11,7 +11,6 @@ cost-model change invalidates the pin:
 """
 from __future__ import annotations
 
-import json
 import os
 
 from repro.core.faults import ChaosSpec, FaultSpec
@@ -63,10 +62,10 @@ def snapshot(res) -> dict:
 
 
 def main() -> None:
+    from pin_io import save_pin
     res = simulate(pinned_spec())
-    with open(PIN_PATH, "w") as f:
-        json.dump(snapshot(res), f, indent=1, sort_keys=True)
-    print(f"wrote {PIN_PATH}: {len(res.requests)} requests, "
+    out = save_pin(snapshot(res), PIN_PATH)
+    print(f"wrote {out}: {len(res.requests)} requests, "
           f"sim_time={res.sim_time}")
 
 

@@ -1,0 +1,42 @@
+"""Transparent gzip I/O for golden pins.
+
+Golden pins are ~1MB of indent-formatted JSON each and compress ~20x;
+storing them as ``.json.gz`` keeps the repo lean without giving up the
+byte-exact compare (the *decompressed* JSON is what equality runs
+over).  ``load_pin``/``save_pin`` take the logical ``*.json`` path and
+resolve the ``.gz`` sibling transparently, so regen scripts and tests
+share one naming convention.  tests/test_golden_pins.py gates that no
+uncompressed pin over 1MB sneaks back into tests/golden/.
+"""
+from __future__ import annotations
+
+import gzip
+import json
+import os
+
+
+def load_pin(path: str):
+    """Load a pin by its logical ``*.json`` path: the gzip sibling
+    (``<path>.gz``) wins when present, the plain file is the
+    fallback."""
+    gz = path + ".gz"
+    if os.path.exists(gz):
+        with gzip.open(gz, "rt") as f:
+            return json.load(f)
+    with open(path) as f:
+        return json.load(f)
+
+
+def save_pin(obj, path: str) -> str:
+    """Write ``obj`` as ``<path>.gz``, removing a stale uncompressed
+    sibling.  ``mtime=0`` keeps the archive byte-stable: regenerating
+    an unchanged pin produces an identical file, so git sees no
+    spurious diff."""
+    data = json.dumps(obj, indent=1, sort_keys=True).encode()
+    gz = path + ".gz"
+    with open(gz, "wb") as raw:
+        with gzip.GzipFile(fileobj=raw, mode="wb", mtime=0) as f:
+            f.write(data)
+    if os.path.exists(path):
+        os.remove(path)
+    return gz

@@ -4,14 +4,12 @@ preemption x streaming, the frozen static-fleet golden pin, drain-based
 scale-down losslessness, time-weighted billing, and the time-varying
 availability accounting regression."""
 import json
-import math
 import os
 import sys
 
 import pytest
 
-from repro.core.autoscale import (AUTOSCALE_POLICIES, AutoscaleSpec,
-                                  ScaleEvent)
+from repro.core.autoscale import AUTOSCALE_POLICIES, AutoscaleSpec
 from repro.core.faults import ChaosSpec, FaultEvent, FaultSpec
 from repro.core.metrics import Results, SCALING_SUMMARY_FIELDS
 from repro.core.simulator import SimSpec, WorkerSpec, simulate
@@ -127,15 +125,15 @@ def _load_pin_module():
     sys.path.insert(0, GOLDEN_DIR)
     try:
         from gen_autoscale_pin import pinned_spec, snapshot
+        from pin_io import load_pin
     finally:
         sys.path.pop(0)
-    return pinned_spec, snapshot
+    return pinned_spec, snapshot, load_pin
 
 
 def test_golden_static_fleet_pin():
-    pinned_spec, snapshot = _load_pin_module()
-    with open(os.path.join(GOLDEN_DIR, "autoscale_pin.json")) as f:
-        want = json.load(f)
+    pinned_spec, snapshot, load_pin = _load_pin_module()
+    want = load_pin(os.path.join(GOLDEN_DIR, "autoscale_pin.json"))
     got = json.loads(json.dumps(snapshot(simulate(pinned_spec()))))
     assert got == want, \
         "static-fleet run diverged from the pre-refactor golden pin"
@@ -143,12 +141,11 @@ def test_golden_static_fleet_pin():
 
 def test_golden_pin_with_disabled_autoscaler():
     """AutoscaleSpec(enabled=False) must be byte-inert: same pin."""
-    pinned_spec, snapshot = _load_pin_module()
+    pinned_spec, snapshot, load_pin = _load_pin_module()
     spec = pinned_spec()
     spec.autoscale = AutoscaleSpec(enabled=False)
     res = simulate(spec)
-    with open(os.path.join(GOLDEN_DIR, "autoscale_pin.json")) as f:
-        want = json.load(f)
+    want = load_pin(os.path.join(GOLDEN_DIR, "autoscale_pin.json"))
     got = json.loads(json.dumps(snapshot(res)))
     assert got == want, "disabled autoscaler perturbed the run"
     assert res.scale_events is None

@@ -1,5 +1,4 @@
 """Property tests for the PagedAttention block manager."""
-import math
 
 import pytest
 from _hypothesis_compat import given, settings, st

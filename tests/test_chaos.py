@@ -2,7 +2,6 @@
 invariants under randomized fault schedules, KV-aware failover,
 costly-recovery semantics, availability accounting, and the
 fail-during-migration / fail-mid-swap-out regressions."""
-import math
 
 import pytest
 

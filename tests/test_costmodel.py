@@ -3,7 +3,7 @@ import pytest
 
 from repro.configs import ASSIGNED, get_config
 from repro.core.costmodel.backends import RooflineBackend, TabularBackend
-from repro.core.costmodel.hardware import A100, G6_AIM, TPU_V5E, V100
+from repro.core.costmodel.hardware import A100, G6_AIM, V100
 from repro.core.costmodel.operators import (BatchMix, OperatorGraph,
                                             kv_bytes_per_token, param_bytes,
                                             state_bytes_per_seq)

@@ -1,0 +1,37 @@
+"""Golden-pin hygiene: pins stay compressed and loadable."""
+import glob
+import os
+import sys
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "golden")
+MAX_UNCOMPRESSED = 1 << 20        # 1MB
+
+
+def test_no_large_uncompressed_pins():
+    """Pins are ~1MB of JSON each and belong in git as .json.gz; a
+    regen script writing a large plain .json again should fail CI, not
+    bloat the repo."""
+    offenders = [
+        os.path.basename(p)
+        for p in glob.glob(os.path.join(GOLDEN_DIR, "*.json"))
+        if os.path.getsize(p) > MAX_UNCOMPRESSED]
+    assert not offenders, \
+        (f"uncompressed pins over 1MB in tests/golden/: {offenders} — "
+         f"store them gzipped via pin_io.save_pin (regen scripts do "
+         f"this already)")
+
+
+def test_every_gz_pin_loads_via_logical_path():
+    """load_pin resolves the logical *.json name to its .gz sibling."""
+    sys.path.insert(0, GOLDEN_DIR)
+    try:
+        from pin_io import load_pin
+    finally:
+        sys.path.pop(0)
+    pins = glob.glob(os.path.join(GOLDEN_DIR, "*.json.gz"))
+    assert pins, "no golden pins found"
+    for gz in pins:
+        pin = load_pin(gz[:-len(".gz")])
+        assert isinstance(pin, dict) and "sim_time" in pin, \
+            f"{os.path.basename(gz)} did not load as a pin snapshot"

@@ -164,10 +164,10 @@ def test_golden_single_model_pin():
     sys.path.insert(0, os.path.dirname(GOLDEN))
     try:
         from gen_hetero_pin import pinned_spec, snapshot
+        from pin_io import load_pin
     finally:
         sys.path.pop(0)
-    with open(GOLDEN) as f:
-        want = json.load(f)
+    want = load_pin(GOLDEN)
     got = json.loads(json.dumps(snapshot(simulate(pinned_spec()))))
     assert got == want, \
         "single-model run diverged from the pre-refactor golden pin"

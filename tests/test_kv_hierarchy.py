@@ -1,6 +1,5 @@
 """Hierarchical KV memory: SwapManager, shared-prefix copy-on-write
 blocks, and the preemption-mode plumbing (docs/MEMORY.md)."""
-import math
 
 import pytest
 

@@ -1,5 +1,4 @@
 """Pad-to-shard planning properties."""
-import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 

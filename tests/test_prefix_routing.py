@@ -1,0 +1,301 @@
+"""Cache-aware prefix-affinity routing, the remote KV tier, and the
+cross-worker fetch path (docs/ROUTING.md)."""
+import pytest
+
+from repro.core import comm as comm_mod
+from repro.core.faults import FaultSpec
+from repro.core.mem.remote_store import RemoteKVSpec, RemoteKVStore
+from repro.core.mem.swap import SwapConfig, SwapManager
+from repro.core.metrics import ROUTING_SUMMARY_FIELDS
+from repro.core.request import Request
+from repro.core.sched.global_sched import make_global_scheduler
+from repro.core.sched.prefix_registry import PrefixRegistry
+from repro.core.simulator import SimSpec, WorkerSpec, simulate
+from repro.core.workload import WorkloadSpec
+
+
+def mk_req(i, prompt=64, out=8, prefix_id=None, prefix_len=0):
+    return Request(id=i, arrival_time=0.0, prompt_len=prompt,
+                   output_len=out, prefix_id=prefix_id,
+                   prefix_len=prefix_len)
+
+
+# ---------------------------------------------------------------------------
+# PrefixRegistry unit behaviour
+# ---------------------------------------------------------------------------
+class FakeClock:
+    def __init__(self):
+        self.now = 0.0
+
+
+def test_registry_publish_holders_and_max_merge():
+    reg = PrefixRegistry()
+    reg.publish(7, wid=0, tokens=128)
+    reg.publish(7, wid=1, tokens=64)
+    reg.publish(7, wid=0, tokens=96)          # never shrinks a claim
+    assert reg.holders(7) == {0: 128, 1: 64}
+    assert reg.tokens_at(7, 0) == 128
+    assert reg.tokens_at(7, 9) == 0
+    assert reg.holders(8) == {}
+
+
+def test_registry_ttl_expiry_and_touch_refresh():
+    clk = FakeClock()
+    reg = PrefixRegistry(clk, ttl=10.0)
+    reg.publish(1, wid=0, tokens=32)
+    reg.publish(1, wid=1, tokens=32)
+    clk.now = 9.0
+    reg.touch(1, 1)                           # refresh one claim
+    clk.now = 15.0
+    assert reg.holders(1) == {1: 32}          # wid 0 aged out
+    assert reg.stats()["registry_expirations"] == 1
+    clk.now = 30.0
+    assert reg.holders(1) == {}
+    assert reg.n_entries() == 0
+
+
+def test_registry_lru_eviction_at_capacity():
+    reg = PrefixRegistry(max_prefixes=2)
+    reg.publish(1, 0, 10)
+    reg.publish(2, 0, 10)
+    reg.publish(1, 1, 10)                     # re-publish: 1 is now MRU
+    reg.publish(3, 0, 10)                     # evicts pid 2 (oldest)
+    assert reg.holders(2) == {}
+    assert reg.holders(1) and reg.holders(3)
+    assert reg.stats()["registry_evictions"] == 1
+
+
+def test_registry_invalidate_worker():
+    reg = PrefixRegistry()
+    reg.publish(1, 0, 10)
+    reg.publish(1, 1, 10)
+    reg.publish(2, 0, 10)
+    assert reg.invalidate_worker(0) == 2
+    assert reg.holders(1) == {1: 10}
+    assert reg.holders(2) == {}
+    assert reg.invalidate_worker(0) == 0      # idempotent
+
+
+# ---------------------------------------------------------------------------
+# RemoteKVStore unit behaviour
+# ---------------------------------------------------------------------------
+def test_remote_store_lru_evicts_unpinned_only():
+    st = RemoteKVStore(100.0)
+    assert st.put(("prefix", 1), 10, 40.0)
+    assert st.put(("prefix", 2), 10, 40.0)
+    assert st.get(("prefix", 1)) == (10, 40.0)   # touch: 2 is now LRU
+    assert st.put(("prefix", 3), 10, 40.0)       # evicts 2
+    assert st.has(("prefix", 1)) and st.has(("prefix", 3))
+    assert st.get(("prefix", 2)) is None
+    s = st.stats()
+    assert s["evictions"] == 1 and s["misses"] == 1
+    assert s["used_bytes"] == 80.0
+
+
+def test_remote_store_pinned_never_evicted_and_reject():
+    st = RemoteKVStore(100.0)
+    assert st.put(("swap", 1), 10, 80.0, pinned=True)
+    assert st.put(("prefix", 1), 10, 20.0)
+    # a pinned put that cannot fit even after evicting every unpinned
+    # entry must be rejected, not evict live swap progress
+    assert not st.put(("swap", 2), 10, 90.0, pinned=True)
+    assert st.has(("swap", 1))
+    assert st.stats()["rejects"] == 1
+    # unpinned entries do make way for a fitting pinned put
+    assert st.put(("swap", 3), 10, 15.0, pinned=True)
+    assert not st.has(("prefix", 1))
+    assert st.drop(("swap", 1)) == 10
+    assert st.drop(("swap", 1)) == 0          # idempotent
+    assert st.stats()["used_bytes"] == 15.0
+
+
+# ---------------------------------------------------------------------------
+# SwapManager with the remote tier
+# ---------------------------------------------------------------------------
+def _sm(host_cap=100.0, remote_cap=1000.0):
+    remote = RemoteKVStore(remote_cap)
+    sm = SwapManager(SwapConfig(host_capacity_bytes=host_cap,
+                                kv_bytes_per_token=1.0,
+                                remote_bw=10.0, remote_setup_latency=1.0),
+                     remote=remote)
+    return sm, remote
+
+
+def test_swap_spills_to_remote_when_host_full():
+    sm, remote = _sm(host_cap=100.0)
+    r1, r2 = mk_req(1), mk_req(2)
+    sm.swap_out(r1, 80)                       # host tier
+    assert sm.can_swap_out(50)                # remote absorbs overflow
+    lat = sm.swap_out(r2, 50)
+    assert lat == pytest.approx(1.0 + 50 / 10.0)   # setup + bytes/bw
+    assert remote.has(("swap", 2)) and sm.holds(r2)
+    assert sm.tokens_held(r2) == 50
+    # swap-in drains the remote copy and frees the object
+    assert sm.swap_in(r2) == pytest.approx(1.0 + 50 / 10.0)
+    assert not remote.has(("swap", 2)) and not sm.holds(r2)
+    s = sm.stats()
+    assert s["remote_out_events"] == 1 and s["remote_in_events"] == 1
+    assert s["remote_bytes_out"] == s["remote_bytes_in"] == 50.0
+
+
+def test_adopt_into_remote_tier_and_fallback():
+    """adopt() lands in the remote tier when host is full; with both
+    tiers full it reports failure (caller recomputes) without leaking
+    partial state."""
+    sm, remote = _sm(host_cap=100.0, remote_cap=60.0)
+    filler = mk_req(9)
+    sm.swap_out(filler, 100)                  # host now full
+    r = mk_req(1)
+    assert sm.adopt(r, 50)
+    assert remote.has(("swap", 1)) and sm.tokens_held(r) == 50
+    r2 = mk_req(2)
+    assert not sm.adopt(r2, 50)               # remote full of pinned KV
+    assert not sm.holds(r2) and not remote.has(("swap", 2))
+    assert sm.stats()["fallbacks"] == 1
+    # dropping the adopted request frees the remote object exactly once
+    assert sm.drop(r) == 50
+    assert sm.drop(r) == 0
+    assert not remote.has(("swap", 1))
+
+
+def test_swap_stats_keys_gated_on_remote():
+    """Without a remote tier attached, stats() must keep the exact
+    legacy key set — golden pins snapshot it."""
+    legacy = SwapManager(SwapConfig()).stats()
+    assert not any(k.startswith("remote_") for k in legacy)
+    sm, _ = _sm()
+    assert {"remote_out_events", "remote_in_events", "remote_bytes_out",
+            "remote_bytes_in"} <= set(sm.stats())
+
+
+# ---------------------------------------------------------------------------
+# PrefixAffinity policy unit behaviour
+# ---------------------------------------------------------------------------
+class FakeWorker:
+    run_prefill = True
+    run_decode = True
+    alive = True
+    draining = False
+    retired = False
+
+    def __init__(self, wid, load=0):
+        self.wid = wid
+        self._load = load
+
+    def load_tokens(self):
+        return self._load
+
+
+def _router(inner="round_robin", **kw):
+    pol = make_global_scheduler("prefix_affinity", inner=inner, **kw)
+    pol.registry = PrefixRegistry()
+    return pol
+
+
+def test_affinity_routes_to_longest_holder():
+    pol = _router()
+    ws = [FakeWorker(0), FakeWorker(1), FakeWorker(2)]
+    pol.registry.publish(5, 1, 64)
+    pol.registry.publish(5, 2, 128)           # longest prefix wins
+    req = mk_req(0, prefix_id=5, prefix_len=128)
+    assert pol.assign(req, ws) == 2
+    assert pol.affinity_hits == 1 and req.fetch_src is None
+
+
+def test_affinity_falls_through_without_prefix_or_holder():
+    pol = _router()
+    ws = [FakeWorker(0), FakeWorker(1)]
+    # no prefix: inner round robin decides
+    assert pol.assign(mk_req(0), ws) == 0
+    # prefix nobody holds: miss, inner decides, claim published
+    req = mk_req(1, prefix_id=5, prefix_len=64)
+    wid = pol.assign(req, ws)
+    assert pol.affinity_misses == 1
+    assert pol.registry.holders(5) == {wid: 64}
+
+
+def test_affinity_overload_diversion_stamps_fetch_hint():
+    pol = _router(inner="least_loaded", overload_factor=2.0)
+    ws = [FakeWorker(0, load=5000), FakeWorker(1, load=10)]
+    pol.registry.publish(5, 0, 128)           # only the hot worker is warm
+    req = mk_req(0, prefix_id=5, prefix_len=128)
+    wid = pol.assign(req, ws)
+    assert wid != 0                           # diverted off the hot holder
+    assert pol.overload_diversions == 1 and pol.fetch_hints == 1
+    assert req.fetch_src == 0 and req.fetch_tokens == 128
+
+
+def test_affinity_skips_dead_holder():
+    pol = _router()
+    ws = [FakeWorker(0), FakeWorker(1)]
+    pol.registry.publish(5, 0, 64)
+    ws[0].alive = False
+    req = mk_req(0, prefix_id=5, prefix_len=64)
+    assert pol.assign(req, ws) == 1           # dead holder is not warm
+    assert pol.affinity_misses == 1
+
+
+# ---------------------------------------------------------------------------
+# fetch pricing: break-even and failure handling (integration)
+# ---------------------------------------------------------------------------
+def _sim_spec(*, n_workers=3, link=comm_mod.NVLINK, remote=True,
+              faults=(), n=90, qps=25.0, retain=True):
+    wl = WorkloadSpec(num_requests=n, qps=qps, seed=5, lengths="fixed",
+                      prompt_len=64, output_len=32,
+                      shared_prefix_len=512, shared_prefix_groups=6)
+    return SimSpec(
+        arch="llama2-7b",
+        workers=[WorkerSpec(hw="A100", gpu_mem_util=0.3)
+                 for _ in range(n_workers)],
+        workload=wl, prefix_sharing=True,
+        global_policy="prefix_affinity",
+        global_policy_kw={"overload_factor": 1.2}, kv_link=link,
+        remote_kv=RemoteKVSpec() if remote else None,
+        faults=faults, retain_requests=retain)
+
+
+def test_break_even_declines_fetch_on_slow_link():
+    """The same workload fetches over a fast link and recomputes over a
+    pathologically slow one — the break-even works both ways."""
+    slow = comm_mod.LinkSpec("glacial", bandwidth=1e3, latency=5.0)
+    fast = simulate(_sim_spec(link=comm_mod.NVLINK,
+                              remote=False)).routing_summary()
+    slow_r = simulate(_sim_spec(link=slow, remote=False)).routing_summary()
+    assert fast["fetch_hints"] > 0, "no diversions: gate is vacuous"
+    assert fast["peer_fetches"] > 0
+    assert slow_r["peer_fetches"] == 0
+    assert slow_r["fetch_recomputes"] > 0
+
+
+def test_fetch_hint_at_dead_peer_is_leak_free():
+    """A worker dying between routing (hint stamped) and admission must
+    not crash or leak: the fetch falls back to the remote tier or to a
+    recorded miss, and every request still finishes."""
+    faults = (FaultSpec(time=1.0, worker=0, kind="fail", duration=2.5),
+              FaultSpec(time=4.0, worker=1, kind="fail", duration=2.5))
+    res = simulate(_sim_spec(faults=faults, n=120, qps=30.0))
+    assert len(res.finished) == 120
+    ro = res.routing_summary()
+    assert ro["registry_invalidations"] > 0
+    # remote tier outlives the workers: fetches still happen post-fail
+    assert ro["fetches"] > 0
+
+
+def test_routing_summary_fields_exact_and_streaming():
+    exact = simulate(_sim_spec()).routing_summary()
+    assert set(exact) == set(ROUTING_SUMMARY_FIELDS)
+    stream = simulate(_sim_spec(retain=False)).routing_summary()
+    assert set(stream) == set(ROUTING_SUMMARY_FIELDS)
+    # per-request fold keeps the fetch counters exact in drop mode
+    assert stream["fetches"] == exact["fetches"]
+    assert stream["fetched_tokens"] == exact["fetched_tokens"]
+    assert stream["prefix_requests"] == exact["prefix_requests"]
+
+
+def test_disabled_path_has_no_routing_surface():
+    wl = WorkloadSpec(num_requests=30, qps=20.0, seed=1)
+    res = simulate(SimSpec(workers=[WorkerSpec(), WorkerSpec()],
+                           workload=wl))
+    assert res.routing_stats is None and res.remote_stats is None
+    ro = res.routing_summary()
+    assert ro["fetches"] == 0 and ro["affinity_hit_rate"] == 0.0

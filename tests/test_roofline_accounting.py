@@ -4,7 +4,6 @@ match a fully-counted compile (naive attention, no loops) at small scale.
 """
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs.base import ArchConfig, DENSE
 from repro.models import model_zoo as zoo

@@ -2,7 +2,6 @@
 reduced depths must equal the directly-compiled deeper model."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs.base import ArchConfig, DENSE
 from repro.models import model_zoo as zoo

@@ -4,13 +4,10 @@ must match the real engine structurally (exact batch traces) and
 temporally (small error on throughput/latency)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.core.costmodel.backends import TabularBackend
 from repro.core.metrics import Results
-from repro.core.request import Request
 from repro.core.simulator import SimSpec, Simulation, WorkerSpec
 from repro.core.workload import WorkloadSpec, generate
 from repro.models import model_zoo as zoo

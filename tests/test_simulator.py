@@ -1,10 +1,8 @@
 """TokenSim end-to-end behaviour: determinism, the paper's directional
 findings, disaggregation, memory pool, faults and stragglers."""
-import pytest
 
 from repro.core.mem.memory_pool import PoolConfig
-from repro.core.simulator import FaultSpec, SimSpec, Simulation, WorkerSpec, \
-    simulate
+from repro.core.simulator import FaultSpec, SimSpec, WorkerSpec, simulate
 from repro.core.workload import WorkloadSpec
 
 

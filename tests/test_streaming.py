@@ -6,9 +6,8 @@ import random
 
 import pytest
 
-from repro.core.metrics import (QuantileSketch, Results, StreamingStats,
-                                percentile)
-from repro.core.simulator import SimSpec, Simulation, WorkerSpec, simulate
+from repro.core.metrics import QuantileSketch, percentile
+from repro.core.simulator import SimSpec, WorkerSpec, simulate
 from repro.core.tenancy import TenantSpec, TenantTier
 from repro.core.workload import (ARRIVAL_KINDS, WorkloadSpec, generate,
                                  generate_multi, make_source,

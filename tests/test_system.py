@@ -1,13 +1,12 @@
 """End-to-end behaviour tests for the whole system: simulator predictions
 about real-engine behaviour hold, and the layered stack composes."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
 from repro.core.request import Request
-from repro.core.simulator import SimSpec, WorkerSpec, simulate
+from repro.core.simulator import SimSpec, WorkerSpec
 from repro.core.workload import WorkloadSpec, generate
 from repro.models import model_zoo as zoo
 from repro.serving.engine import EngineConfig, ServingEngine

@@ -15,8 +15,7 @@ from repro.models import model_zoo as zoo
 from repro.training.data import DataConfig, DataPipeline
 from repro.training.grad_compress import compress_grads, ef_init, quantize, \
     dequantize
-from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, \
-    schedule
+from repro.training.optimizer import AdamWConfig, schedule
 from repro.training.trainer import TrainConfig, Trainer
 
 

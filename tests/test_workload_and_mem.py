@@ -1,5 +1,4 @@
 """Workload generation, memory pool, comm model, schedulers."""
-import math
 
 import pytest
 
@@ -7,8 +6,7 @@ from repro.core.comm import Link, LinkSpec
 from repro.core.engine import Environment
 from repro.core.mem.memory_pool import MemoryPool, PoolConfig, PrefixTrie
 from repro.core.request import Request
-from repro.core.workload import SHAREGPT_PROMPT, WorkloadSpec, generate, \
-    save_trace
+from repro.core.workload import WorkloadSpec, generate, save_trace
 
 
 def test_workload_deterministic():
